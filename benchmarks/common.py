@@ -1,0 +1,42 @@
+"""Shared benchmark helpers: timing + result records."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def timeit(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class Report:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+
+    def add(self, **kw):
+        self.rows.append(kw)
+
+    def print(self):
+        print(f"\n== {self.name} ==")
+        if not self.rows:
+            return
+        keys = list(self.rows[0].keys())
+        print(",".join(keys))
+        for r in self.rows:
+            print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,44 @@
+"""Paper Figure 2: estimator error vs non-ideality cases (i)-(vi).
+
+Five benchmark kernels; |error| of each case against the detailed
+reference ("post-synthesis" stand-in).  Paper's numbers on silicon:
+latency error 46% -> 9% -> ~0 over (i)->(iii); final power error ~22%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import mibench
+from repro.core import detailed, estimate_all_cases, errors_vs_detailed
+from repro.core.characterization import default_profile
+from repro.core.estimator import CASES
+from repro.core.hwconfig import baseline
+from repro.core.physical import DEFAULT_PHYS
+
+from .common import Report
+
+
+def run() -> Report:
+    rep = Report("fig2_error_cases (paper: lat 46%->9%->0; pow ~22%)")
+    prof = default_profile()
+    hw = baseline()
+    errs = {c: {"lat": [], "pow": []} for c in CASES}
+    for k in mibench.all_kernels():
+        final, trace = k.run()
+        ref = detailed.report(k.program, trace, hw, DEFAULT_PHYS)
+        ests = estimate_all_cases(k.program, trace, prof, hw)
+        for c, e in ests.items():
+            d = errors_vs_detailed(e, ref)
+            errs[c]["lat"].append(d["latency_err"])
+            errs[c]["pow"].append(d["power_err"])
+    for c in CASES:
+        rep.add(case=c,
+                mean_latency_err_pct=100 * float(np.mean(errs[c]["lat"])),
+                max_latency_err_pct=100 * float(np.max(errs[c]["lat"])),
+                mean_power_err_pct=100 * float(np.mean(errs[c]["pow"])),
+                max_power_err_pct=100 * float(np.max(errs[c]["pow"])))
+    return rep
+
+
+if __name__ == "__main__":
+    run().print()

@@ -1,0 +1,48 @@
+"""Paper Figure 3: energy vs latency for the four convolution mappings,
+normalized to the detailed ("post-synthesis") Im2col-IP values.
+
+Three series per mapping: detailed reference (green in the paper), our
+case-(vi) estimate (red), and the naive case-(i) estimate (gray) -- the
+last shows why characterization matters for drawing the right
+conclusions.
+"""
+from __future__ import annotations
+
+from repro.apps import conv
+from repro.core import detailed, estimate
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import baseline
+from repro.core.physical import DEFAULT_PHYS
+
+from .common import Report
+
+
+def run() -> Report:
+    rep = Report("fig3_conv_mappings (normalized to detailed Im2col-IP)")
+    prof = default_profile()
+    hw = baseline()
+    rows = {}
+    for k in conv.all_mappings():
+        final, trace = k.run()
+        ref = detailed.report(k.program, trace, hw, DEFAULT_PHYS)
+        e6 = estimate(k.program, trace, prof, hw, "vi")
+        e1 = estimate(k.program, trace, prof, hw, "i")
+        rows[k.name] = (ref, e6, e1)
+    base = rows["Im2col-IP"][0]
+    for name, (ref, e6, e1) in rows.items():
+        rep.add(mapping=name,
+                lat_detail=ref.latency_cc / base.latency_cc,
+                lat_est_vi=e6.latency_cc / base.latency_cc,
+                lat_est_i=e1.latency_cc / base.latency_cc,
+                energy_detail=ref.energy_pj / base.energy_pj,
+                energy_est_vi=e6.energy_pj / base.energy_pj,
+                energy_est_i=e1.energy_pj / base.energy_pj,
+                lat_err_pct=100 * abs(e6.latency_cc - ref.latency_cc)
+                / ref.latency_cc,
+                energy_err_pct=100 * abs(e6.energy_pj - ref.energy_pj)
+                / ref.energy_pj)
+    return rep
+
+
+if __name__ == "__main__":
+    run().print()

@@ -1,0 +1,26 @@
+"""Roofline table from the dry-run cache (see launch/dryrun.py).
+
+Not a timing benchmark: prints the per-(arch x shape) three-term roofline
+for whichever cells have completed dry-runs."""
+from __future__ import annotations
+
+from repro.analysis.roofline import load_dryrun_records, roofline_table
+
+from .common import Report
+
+
+def run() -> Report:
+    rep = Report("roofline_table (from experiments/dryrun)")
+    recs = load_dryrun_records()
+    base = [r for r in recs if r.get("mesh") in ("single", "multi")]
+    n_ok = sum(r.get("status") == "ok" for r in base)
+    n_skip = sum(r.get("status") == "skip" for r in base)
+    rep.add(cells_ok=n_ok, cells_skip=n_skip,
+            cells_error=len(base) - n_ok - n_skip,
+            opt_variant_records=len(recs) - len(base))
+    print(roofline_table(mesh="single"))
+    return rep
+
+
+if __name__ == "__main__":
+    run().print()

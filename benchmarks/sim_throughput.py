@@ -1,0 +1,54 @@
+"""The "instantaneous result" claim (paper Section 1): design points per
+second through the fused simulate+estimate sweep, vs the trace-based
+single-point path.  The batched path is what runs mesh-sharded at fleet
+scale (core/dse.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import mibench
+from repro.core import dse, estimate
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import TOPOLOGIES, stack_configs
+
+from .common import Report, timeit
+
+
+def run() -> Report:
+    rep = Report("sim_throughput (design points / second)")
+    prof = default_profile()
+    k = mibench.sha_mix()
+    hws = [mk() for mk in TOPOLOGIES.values()]
+
+    # single-point trace path (compile excluded via warmup)
+    runner_single = None
+
+    def single():
+        final, trace = k.run()
+        estimate(k.program, trace, prof, TOPOLOGIES["baseline"](), "vi")
+
+    t_single = timeit(single, repeats=3, warmup=1)
+
+    for B in (8, 64):
+        mems = np.broadcast_to(k.mem_init, (B, k.mem_init.size)).copy()
+        hw_b = stack_configs([hws[i % len(hws)] for i in range(B)])
+        fn = dse.make_sweep_fn(k.program, prof, max_steps=k.max_steps)
+        jfn = jax.jit(fn)
+        mems_j = jnp.asarray(mems)
+
+        def batched():
+            jax.block_until_ready(jfn(mems_j, hw_b))
+
+        t = timeit(batched, repeats=3, warmup=1)
+        rep.add(path=f"fused_batch_{B}", seconds_per_batch=t,
+                points_per_s=B / t,
+                speedup_vs_single=(t_single * B) / t)
+    rep.add(path="single_trace", seconds_per_batch=t_single,
+            points_per_s=1.0 / t_single, speedup_vs_single=1.0)
+    return rep
+
+
+if __name__ == "__main__":
+    run().print()

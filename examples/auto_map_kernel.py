@@ -1,0 +1,44 @@
+"""Automatic mapping example: expression DAG -> CGRA program -> simulate
+-> estimate -> compare against a hand-written equivalent.
+
+  PYTHONPATH=src python examples/auto_map_kernel.py
+"""
+import numpy as np
+
+from repro.core import estimate
+from repro.core.characterization import default_profile
+from repro.core.cgra import run_program
+from repro.core.hwconfig import TOPOLOGIES, baseline
+from repro.core.mapper import DAG, map_dag
+
+# y[j] = (a[j] * w + b[j]) >> 2  for j in 0..7  (a at 0, b at 8, y at 64)
+d = DAG()
+w = d.load(16)
+for j in range(8):
+    m = d.alu("SMUL", d.load(j), w)
+    s = d.alu("SADD", m, d.load(8 + j))
+    d.store(64 + j, d.alu("SRA", s, d.const(2)))
+
+prog = map_dag(d, name="auto_axpy_shift")
+print(f"mapped {len(d.nodes)} DAG nodes -> {prog.n_instrs} CGRA "
+      f"instructions on a 4x4 array")
+
+rng = np.random.default_rng(0)
+mem = np.zeros(4096, np.int32)
+mem[0:17] = rng.integers(-100, 100, 17)
+final, trace = run_program(prog, mem, max_steps=prog.n_instrs + 2)
+got = np.asarray(final.mem)[64:72]
+want = ((mem[0:8].astype(np.int64) * int(mem[16]) + mem[8:16]) >> 2
+        ).astype(np.int32)
+assert (got == want).all(), (got, want)
+print("simulation matches the DAG oracle:", got.tolist())
+
+profile = default_profile()
+for topo in ("baseline", "a_fast_mul", "d_dma_per_pe"):
+    hw = TOPOLOGIES[topo]()
+    final, trace = run_program(prog, mem, hw, max_steps=prog.n_instrs + 2)
+    est = estimate(prog, trace, profile, hw, "vi")
+    print(f"  {topo:14s}: {est.latency_cc:4d} cc, "
+          f"{est.energy_pj:8.1f} pJ, {est.power_mw:.3f} mW")
+print("machine-mapped kernels flow through the same estimator/DSE path "
+      "as hand-written ones.")

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's whole workflow in ~40 lines.
+
+1. author a CGRA kernel, 2. behaviorally simulate + verify it,
+3. estimate power/latency/energy from the one-time characterization,
+4. compare hardware topologies, 5. encode the deployment bitstream.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.apps import conv
+from repro.core import bitstream, detailed, estimate
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import TOPOLOGIES
+from repro.core.physical import DEFAULT_PHYS
+
+# 1-2. a kernel with data + oracle: the paper's conv-WP mapping
+kernel = conv.conv_wp()
+final, trace = kernel.run()
+assert kernel.check(np.asarray(final.mem)), "behavioral sim disagrees!"
+print(f"simulated {kernel.name}: {int(final.t_cc)} cycles, result OK")
+
+# 3. instantaneous estimation from the cached characterization profile
+profile = default_profile()
+for case in ("i", "iii", "vi"):
+    est = estimate(kernel.program, trace, profile,
+                   TOPOLOGIES["baseline"](), case)
+    print(f"  case ({case}): {est.latency_cc} cc, "
+          f"{est.energy_pj/1e3:.2f} nJ, {est.power_mw:.3f} mW")
+
+# compare against the slow "post-synthesis" flow (detailed reference)
+ref = detailed.report(kernel.program, trace, TOPOLOGIES["baseline"](),
+                      DEFAULT_PHYS)
+print(f"  detailed ref: {ref.latency_cc} cc, {ref.energy_pj/1e3:.2f} nJ")
+
+# 4. hardware exploration without re-characterizing
+for name in ("a_fast_mul", "d_dma_per_pe"):
+    hw = TOPOLOGIES[name]()
+    final2, trace2 = kernel.run(hw=hw)
+    est = estimate(kernel.program, trace2, profile, hw, "vi")
+    print(f"  topology {name}: {est.latency_cc} cc "
+          f"({100*(est.latency_cc-ref.latency_cc)/ref.latency_cc:+.1f}%)")
+
+# 5. deployment bitstream
+blob = bitstream.encode(kernel.program)
+print(f"bitstream: {len(blob)} bytes for "
+      f"{kernel.program.n_instrs} instructions x 16 PEs")

@@ -1,0 +1,19 @@
+"""Batched serving example: continuous batching over 4 decode slots.
+
+  PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main  # noqa: E402
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--smoke", "--requests", "8",
+                "--batch-slots", "4", "--gen", "12", "--context", "96",
+                "--temperature", "0.8"])

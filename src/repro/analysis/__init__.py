@@ -1,0 +1,2 @@
+from .roofline import (HW_V5E, RooflineTerms, cell_roofline, model_flops,
+                       load_dryrun_records, roofline_table)

@@ -1,0 +1,225 @@
+"""Three-term roofline from the dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Sources: XLA cost_analysis (flops / bytes accessed; exact because the
+dry-run unrolls layer scans -- see models/scanning.py) and the
+post-partitioning HLO text (per-device collective payload bytes, summed
+by launch/dryrun.collective_bytes).
+
+MODEL_FLOPS is the napkin convention: 6*N_active*tokens for training,
+2*N_active*tokens for forward-only (prefill/decode), with N_active the
+matmul-participating parameters (MoE counts top_k/E of expert weights;
+attention's quadratic term is intentionally excluded by the convention,
+so HLO/MODEL > 1 even without waste).  The ratio flags remat recompute
+and redundancy; the per-term seconds flag the bottleneck the perf loop
+(EXPERIMENTS.md Section Perf) works on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from ..configs import get_config
+from ..models.config import ModelConfig, SHAPES, ShapeConfig
+
+# TPU v5e, per chip.
+HW_V5E = {
+    "peak_flops": 197e12,       # bf16
+    "hbm_bw": 819e9,            # bytes/s
+    "link_bw": 50e9,            # bytes/s per ICI link
+}
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter / FLOP model
+# ---------------------------------------------------------------------------
+
+def active_matmul_params(cfg: ModelConfig) -> float:
+    """Matmul-participating parameters touched per decoder token."""
+    D, F, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    attn = D * H * hd + 2 * D * KV * hd + H * hd * D
+    mlp_dense = (3 if cfg.act == "swiglu" else 2) * D * F
+
+    if cfg.family in ("dense", "vlm"):
+        per_layer = attn + mlp_dense
+        layers = cfg.n_layers * per_layer
+    elif cfg.family == "moe":
+        per_expert = (3 if cfg.act == "swiglu" else 2) * D * F
+        per_layer = attn + D * cfg.n_experts \
+            + cfg.top_k * per_expert
+        layers = cfg.n_layers * per_layer
+    elif cfg.family == "encdec":
+        # decoder tokens pass self+cross+mlp; encoder accounted separately
+        per_dec = 2 * attn + mlp_dense
+        layers = cfg.n_layers * per_dec
+    elif cfg.family == "hybrid":
+        I = cfg.ssm_expand * D
+        N = cfg.ssm_state
+        Hs = I // cfg.ssm_head_dim
+        mamba = D * (2 * I + 2 * N + Hs) + I * D
+        G = cfg.n_layers // cfg.shared_attn_every
+        layers = cfg.n_layers * mamba + G * (attn + mlp_dense)
+    else:  # ssm / xlstm
+        mlstm = 3 * D * D + 2 * D * D + D * H * 2      # q,k,v + o,out + gates
+        slstm = 8 * D * D + D * D                      # wx, wh (4D each) + out
+        layers = (cfg.n_layers // 2) * (mlstm + slstm)
+    head = D * cfg.vocab_padded
+    return float(layers + head)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The 6ND / 2ND convention, global (all chips)."""
+    n = active_matmul_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.tokens
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    flops = mult * n * tokens
+    if cfg.family == "encdec" and shape.kind != "decode":
+        # encoder side: enc_seq tokens through encoder layers
+        D, F = cfg.d_model, cfg.d_ff
+        attn = 4 * D * D
+        enc_n = cfg.n_enc_layers * (attn + (3 if cfg.act == "swiglu"
+                                            else 2) * D * F)
+        flops += mult * enc_n * cfg.enc_seq * shape.global_batch
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0
+    hlo_flops_global: float = 0.0
+    reason: str = ""
+
+    @property
+    def dominant(self) -> str:
+        if self.status != "ok":
+            return "-"
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """No-overlap serial estimate (upper bound on step time)."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_s(self) -> float:
+        """Perfect-overlap estimate (lower bound): max of the terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def compute_fraction(self) -> float:
+        """MODEL_FLOPS-based roofline fraction at the perfect-overlap
+        bound: (model-useful compute time) / step lower bound."""
+        if self.status != "ok" or self.roofline_s <= 0:
+            return 0.0
+        n_dev = 512 if self.mesh == "multi" else 256
+        useful_s = self.model_flops / (n_dev * HW_V5E["peak_flops"])
+        return useful_s / self.roofline_s
+
+
+def load_dryrun_records(dryrun_dir: Optional[Path] = None) -> List[Dict]:
+    d = dryrun_dir or DRYRUN_DIR
+    out = []
+    for p in sorted(d.glob("*.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def cell_roofline(rec: Dict, hw: Dict = HW_V5E) -> RooflineTerms:
+    arch, shape_n, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    if (rec.get("overrides") or {}).get("unroll_layers") is False:
+        # scan-over-layers fallback (XLA CPU segfaults on the unrolled
+        # module): sharding contract proven, but cost_analysis counts the
+        # layer body once -- costs are lower bounds, flagged in the table.
+        arch = arch + "†"
+    t = RooflineTerms(arch=arch, shape=shape_n, mesh=mesh,
+                      status=rec.get("status", "error"),
+                      reason=rec.get("reason", rec.get("error", "")))
+    if t.status != "ok":
+        return t
+    n_dev = rec.get("n_devices", 256)
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[shape_n]
+    t.compute_s = rec["flops_per_device"] / hw["peak_flops"]
+    t.memory_s = rec["bytes_per_device"] / hw["hbm_bw"]
+    coll = rec.get("collective_bytes_tpu",
+                   rec.get("collective_bytes", {}))
+    t.collective_s = sum(coll.values()) / hw["link_bw"]
+    t.model_flops = model_flops(cfg, shape)
+    t.hlo_flops_global = rec["flops_per_device"] * n_dev
+    return t
+
+
+def roofline_table(records: Optional[List[Dict]] = None,
+                   mesh: str = "single") -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    recs = records if records is not None else load_dryrun_records()
+    rows = [cell_roofline(r) for r in recs if r.get("mesh") == mesh]
+    rows.sort(key=lambda t: (t.arch, t.shape))
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPS | HLO/MODEL | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for t in rows:
+        if t.status == "skip":
+            lines.append(f"| {t.arch} | {t.shape} | - | - | - | "
+                         f"skip | - | - | {t.reason} |")
+        elif t.status != "ok":
+            lines.append(f"| {t.arch} | {t.shape} | - | - | - | "
+                         f"ERROR | - | - | {t.reason[:48]} |")
+        else:
+            inv = (1.0 / t.useful_ratio) if t.useful_ratio else 0.0
+            lines.append(
+                f"| {t.arch} | {t.shape} | {t.compute_s:.4f} | "
+                f"{t.memory_s:.4f} | {t.collective_s:.4f} | "
+                f"**{t.dominant}** | {t.model_flops:.3e} | "
+                f"{inv:.2f} | {t.compute_fraction:.3f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print(roofline_table(mesh=args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .manager import (CheckpointManager, restore_resharded, save_tree,
+                      load_tree)

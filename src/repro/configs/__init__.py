@@ -1,0 +1,4 @@
+"""Assigned-architecture registry: one module per arch, exact public
+hyperparameters; every module also exports ``smoke()`` -- a reduced config
+of the same family for CPU tests."""
+from .common import ARCHS, get_config, get_smoke_config, list_archs

@@ -1,0 +1,51 @@
+"""Architecture registry.
+
+``get_config(name)``: the full assigned configuration (dry-run only on
+this CPU container).  ``get_smoke_config(name)``: reduced same-family
+config for smoke tests (small widths/depths, tiny vocab).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from ..models.config import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]().validate()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _SMOKE[name]().validate()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+ARCHS = list_archs  # legacy alias
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (granite_moe_1b, llama3_2_1b, mixtral_8x22b, olmo_1b,
+                   qwen2_vl_7b, smollm_360m, starcoder2_15b, whisper_small,
+                   xlstm_350m, zamba2_2_7b)  # noqa: F401
+    _LOADED = True

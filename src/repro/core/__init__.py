@@ -1,0 +1,23 @@
+"""Core of the reproduction: the paper's CGRA estimation framework.
+
+Public API:
+  isa / Program / ProgramBuilder / assemble  -- authoring CGRA kernels
+  run_program / make_runner                  -- behavioral simulation
+  HwConfig + TOPOLOGIES                      -- hardware descriptions
+  characterize -> Profile                    -- one-time profiling pass
+  estimate / estimate_all_cases              -- cases (i)-(vi)
+  detailed.report                            -- post-synthesis stand-in
+  bitstream.encode/decode                    -- deployment encoding
+  dse                                        -- mesh-sharded design sweeps
+"""
+from . import bitstream, detailed, isa
+from .cgra import SimState, StepRecord, init_state, make_runner, run_program
+from .characterization import Profile, characterize
+from .estimator import (CASES, Estimate, errors_vs_detailed, estimate,
+                        estimate_all_cases)
+from .hwconfig import (TOPOLOGIES, HwConfig, baseline, mod_a_fast_mul,
+                       mod_b_n_to_m, mod_c_interleaved, mod_d_dma_per_pe,
+                       stack_configs)
+from .physical import DEFAULT_PHYS, PhysicalModel
+from .program import Program, ProgramBuilder, assemble
+from .trace import DenseTrace, densify

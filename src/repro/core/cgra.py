@@ -1,0 +1,248 @@
+"""Lockstep behavioral simulator of the time-multiplexed CGRA.
+
+Execution model (paper Section 1): all PEs share a program counter; at each
+step the CGRA executes one *instruction* (= one operation per PE); the
+instruction retires when the slowest PE finishes, and only then does the PC
+advance (or branch).  Each PE reads operands from immediates, its own
+registers, or its four torus neighbours' output registers, all sampled at
+the *start* of the instruction (register-transfer semantics: every PE sees
+its neighbours' values from the previous instruction).
+
+The simulator is a single ``lax.scan`` over a static step bound with
+"done" masking, which makes it jit-able and vmap-able over
+  * data batches (different memory images), and
+  * hardware-configuration batches (HwConfig pytrees with a leading axis),
+the substrate for mesh-sharded design-space sweeps (dse.py).
+
+Opcode dispatch is branchless: every op's result is computed for all PEs
+(cheap int32 vector ops on the VPU) and the per-PE opcode selects among
+them -- the TPU-native replacement for the paper's interpreted per-op
+Python dispatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .hwconfig import HwConfig
+from .memory import alu_latency_table, mem_completion_times
+from .program import Program
+
+
+class SimState(NamedTuple):
+    regs: jnp.ndarray   # (P, 4) int32
+    rout: jnp.ndarray   # (P,)  int32
+    pc: jnp.ndarray     # ()    int32
+    done: jnp.ndarray   # ()    bool
+    mem: jnp.ndarray    # (M,)  int32
+    t_cc: jnp.ndarray   # ()    int32  cumulative true cycles
+
+
+class StepRecord(NamedTuple):
+    """Per-executed-instruction trace row (fixed shape, masked by `valid`).
+
+    Everything static per instruction index (op, srcs, dest, imm) is *not*
+    recorded -- it is recoverable as program.X[pc]."""
+    pc: jnp.ndarray        # ()   instruction index executed
+    valid: jnp.ndarray     # ()   bool
+    a: jnp.ndarray         # (P,) operand A values
+    b: jnp.ndarray         # (P,) operand B values
+    result: jnp.ndarray    # (P,) ALU/load results (0 where op writes nothing)
+    mem_addr: jnp.ndarray  # (P,) word address of mem request (0 if none)
+    mem_done: jnp.ndarray  # (P,) completion cc of mem request (0 if none)
+    busy: jnp.ndarray      # (P,) per-PE busy cycles this instruction
+    lat: jnp.ndarray       # ()   instruction latency in cc
+    rout: jnp.ndarray      # (P,) output registers AFTER the instruction
+
+
+def init_state(mem_init: jnp.ndarray, n_pes: int) -> SimState:
+    return SimState(
+        regs=jnp.zeros((n_pes, 4), jnp.int32),
+        rout=jnp.zeros((n_pes,), jnp.int32),
+        pc=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((), jnp.bool_),
+        mem=jnp.asarray(mem_init, jnp.int32),
+        t_cc=jnp.zeros((), jnp.int32),
+    )
+
+
+def _gather_operands(src_row, imm_row, regs, rout, nbr):
+    """(P,) source selectors -> (P,) values."""
+    P = src_row.shape[0]
+    candidates = jnp.stack([
+        jnp.zeros((P,), jnp.int32),       # ZERO
+        imm_row,                          # IMM
+        regs[:, 0], regs[:, 1], regs[:, 2], regs[:, 3],
+        rout,                             # ROUT
+        rout[nbr["RCL"]], rout[nbr["RCR"]],
+        rout[nbr["RCT"]], rout[nbr["RCB"]],
+    ])                                    # (N_SRCS, P)
+    return jnp.take_along_axis(candidates, src_row[None, :], axis=0)[0]
+
+
+def _alu_results(op_row, a, b):
+    """Branchless: compute every op for all PEs, select by opcode."""
+    sh = b & 31
+    zeros = jnp.zeros_like(a)
+    table = [zeros] * isa.N_OPS
+    table[isa.OP["SADD"]] = a + b
+    table[isa.OP["SSUB"]] = a - b
+    table[isa.OP["SMUL"]] = a * b
+    table[isa.OP["SLL"]] = jax.lax.shift_left(a, sh)
+    table[isa.OP["SRL"]] = jax.lax.shift_right_logical(a, sh)
+    table[isa.OP["SRA"]] = jax.lax.shift_right_arithmetic(a, sh)
+    table[isa.OP["LAND"]] = a & b
+    table[isa.OP["LOR"]] = a | b
+    table[isa.OP["LXOR"]] = a ^ b
+    table[isa.OP["SLT"]] = (a < b).astype(jnp.int32)
+    table[isa.OP["MV"]] = a
+    stacked = jnp.stack(table)            # (N_OPS, P)
+    return jnp.take_along_axis(stacked, op_row[None, :], axis=0)[0]
+
+
+def _branch_target(op_row, a, b, imm_row, pc):
+    conds = jnp.stack([
+        jnp.where(op_row == isa.OP["BEQ"], a == b, False),
+        jnp.where(op_row == isa.OP["BNE"], a != b, False),
+        jnp.where(op_row == isa.OP["BLT"], a < b, False),
+        jnp.where(op_row == isa.OP["BGE"], a >= b, False),
+        op_row == isa.OP["JUMP"],
+    ]).any(axis=0)                        # (P,)
+    any_taken = conds.any()
+    first = jnp.argmax(conds)             # lowest-indexed taken branch wins
+    target = imm_row[first]
+    return jnp.where(any_taken, target, pc + 1).astype(jnp.int32)
+
+
+def _dedup_stores(is_store, addr):
+    """Ascending-PE-order store arbitration: for duplicate addresses only
+    the highest-indexed PE's store lands (it is written last)."""
+    P = is_store.shape[0]
+    i = jnp.arange(P)
+    later_same = (is_store[None, :] & (addr[None, :] == addr[:, None])
+                  & (i[None, :] > i[:, None]))       # (P, P) j later than i
+    overwritten = later_same.any(axis=1)
+    return is_store & ~overwritten
+
+
+def make_step(program: Program, rows: int, cols: int, mem_size: int):
+    """Build the single-instruction transition function for `program`."""
+    P = program.n_pes
+    assert P == rows * cols
+    nbr = {k: jnp.asarray(v) for k, v in
+           isa.neighbour_index_maps(rows, cols).items()}
+    ops_t = jnp.asarray(program.ops)
+    dest_t = jnp.asarray(program.dest)
+    srcA_t = jnp.asarray(program.srcA)
+    srcB_t = jnp.asarray(program.srcB)
+    imm_t = jnp.asarray(program.imm)
+    is_load_t = jnp.asarray(isa.IS_LOAD)[ops_t]      # (T, P) static masks
+    is_store_t = jnp.asarray(isa.IS_STORE)[ops_t]
+    writes_rout_t = jnp.asarray(isa.WRITES_ROUT)[ops_t]
+
+    def step(state: SimState, hw: HwConfig) -> Tuple[SimState, StepRecord]:
+        pc = state.pc
+        op_row = ops_t[pc]
+        imm_row = imm_t[pc]
+        a = _gather_operands(srcA_t[pc], imm_row, state.regs, state.rout, nbr)
+        b = _gather_operands(srcB_t[pc], imm_row, state.regs, state.rout, nbr)
+
+        # ---- memory ------------------------------------------------------
+        is_load = is_load_t[pc]
+        is_store = is_store_t[pc]
+        # LWD/SWD address = imm; LWI addr = a; SWI addr = a (value = b).
+        direct = (op_row == isa.OP["LWD"]) | (op_row == isa.OP["SWD"])
+        addr = jnp.where(direct, imm_row, a) % mem_size
+        load_val = state.mem[addr]
+        store_val = jnp.where(op_row == isa.OP["SWD"], a, b)
+        landed = _dedup_stores(is_store, addr)
+        mem_new = state.mem.at[jnp.where(landed, addr, mem_size)].set(
+            jnp.where(landed, store_val, 0), mode="drop")
+
+        # ---- ALU + writeback ---------------------------------------------
+        alu = _alu_results(op_row, a, b)
+        result = jnp.where(is_load, load_val, alu)
+        writes = writes_rout_t[pc]
+        rout_new = jnp.where(writes, result, state.rout)
+        d = dest_t[pc]
+        regs_new = state.regs
+        for k in range(4):
+            hit = writes & (d == k)
+            regs_new = regs_new.at[:, k].set(
+                jnp.where(hit, result, regs_new[:, k]))
+
+        # ---- timing (the "true" hardware timing; detailed sim & case-iii
+        # estimator share this model, see memory.py docstring) --------------
+        is_mem = is_load | is_store
+        mem_done = mem_completion_times(is_mem, addr, hw, mem_size, cols)
+        alu_lat = alu_latency_table(hw)[op_row]
+        busy = jnp.where(is_mem, mem_done, alu_lat).astype(jnp.int32)
+        lat = jnp.max(busy).astype(jnp.int32)
+
+        # ---- control ------------------------------------------------------
+        next_pc = _branch_target(op_row, a, b, imm_row, pc)
+        next_pc = jnp.clip(next_pc, 0, program.n_instrs - 1)
+        exited = (op_row == isa.OP["EXIT"]).any()
+
+        live = ~state.done
+        new_state = SimState(
+            regs=jnp.where(live, regs_new, state.regs),
+            rout=jnp.where(live, rout_new, state.rout),
+            pc=jnp.where(live, next_pc, state.pc),
+            done=state.done | exited,
+            mem=jnp.where(live, mem_new, state.mem),
+            t_cc=jnp.where(live, state.t_cc + lat, state.t_cc),
+        )
+        z = jnp.zeros((P,), jnp.int32)
+        rec = StepRecord(
+            pc=jnp.where(live, pc, -1),
+            valid=live,
+            a=jnp.where(live, a, z), b=jnp.where(live, b, z),
+            result=jnp.where(live, result, z),
+            mem_addr=jnp.where(live & is_mem, addr, z),
+            mem_done=jnp.where(live, mem_done, z),
+            busy=jnp.where(live, busy, z),
+            lat=jnp.where(live, lat, 0),
+            rout=jnp.where(live, rout_new, state.rout),
+        )
+        return new_state, rec
+
+    return step
+
+
+def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
+                mem_size: int = 4096, max_steps: int = 4096,
+                record: bool = True):
+    """Returns jitted ``run(mem_init, hw) -> (final_state, trace)``.
+
+    ``trace`` is a StepRecord with a leading (max_steps,) axis, masked by
+    ``valid``; pass ``record=False`` to drop it (cheapest DSE form).
+    vmap over ``mem_init`` for data batches and over ``hw`` (stacked
+    HwConfig) for hardware sweeps.
+    """
+    step = make_step(program, rows, cols, mem_size)
+
+    @jax.jit
+    def run(mem_init: jnp.ndarray, hw: HwConfig):
+        def body(state, _):
+            new_state, rec = step(state, hw)
+            return new_state, (rec if record else 0)
+        state0 = init_state(mem_init, program.n_pes)
+        final, trace = jax.lax.scan(body, state0, None, length=max_steps)
+        return final, trace
+
+    return run
+
+
+def run_program(program: Program, mem_init, hw: Optional[HwConfig] = None,
+                **kw):
+    """One-shot convenience wrapper (compiles per call)."""
+    from .hwconfig import baseline
+    hw = hw or baseline()
+    runner = make_runner(program, **kw)
+    return runner(jnp.asarray(mem_init, jnp.int32), hw)

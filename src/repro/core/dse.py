@@ -1,0 +1,144 @@
+"""Design-space exploration at fleet scale.
+
+The paper's value proposition is *instantaneous comparative analysis* of
+(kernel mapping x hardware topology) points.  Here that becomes a batched,
+mesh-sharded computation:
+
+  * the functional simulator (cgra.py) is vmapped over a *hardware-config
+    batch* (stacked HwConfig pytree) and over a *data batch* (different
+    memory images);
+  * the estimator's case-(vi) analytic model is re-expressed in pure jnp
+    (estimate_vi_jnp) so the full simulate->estimate path stays inside one
+    jitted program -- no host round-trip per design point;
+  * sweep() shards the flattened (hw x data) grid over every device of the
+    mesh with pjit: on the production pod this is a 512-way data-parallel
+    sweep, the deployable version of the paper's tool.
+
+Different *mappings* (programs) have different shapes and are therefore a
+python-level loop around the sharded sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .cgra import make_step, init_state
+from .characterization import Profile
+from .hwconfig import HwConfig, stack_configs
+from .memory import mem_completion_times
+from .program import Program
+
+
+class SweepResult(NamedTuple):
+    latency_cc: jnp.ndarray   # (B,) int32
+    energy_pj: jnp.ndarray    # (B,) float32
+    power_mw: jnp.ndarray     # (B,) float32
+    checksum: jnp.ndarray     # (B,) int32  (output-memory hash for validity)
+
+
+def _profile_tables(profile: Profile):
+    return dict(
+        lat=jnp.asarray(profile.lat, jnp.int32),
+        t_mem=jnp.asarray(profile.t_mem, jnp.int32),
+        p_dec=jnp.asarray(profile.p_dec, jnp.float32),
+        p_act=jnp.asarray(profile.p_act, jnp.float32),
+        p_idle=jnp.asarray(profile.p_idle, jnp.float32),
+        e_src=jnp.asarray(profile.e_src, jnp.float32),
+        e_sw_op=jnp.asarray(profile.e_sw_op, jnp.float32),
+        e_sw_mux=jnp.asarray(profile.e_sw_mux, jnp.float32),
+        mulzero=jnp.asarray(profile.mulzero, jnp.float32),
+        t_clk_ns=jnp.asarray(profile.t_clk_ns, jnp.float32),
+    )
+
+
+def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
+                  cols: int = 4, mem_size: int = 4096, max_steps: int = 2048):
+    """Build ``fn(mem_init (B,M), hw batched (B,)) -> SweepResult`` where the
+    case-(vi) estimate is fused into the simulation scan (single pass, no
+    trace materialization -- O(1) memory per design point)."""
+    step = make_step(program, rows, cols, mem_size)
+    P = program.n_pes
+    tbl = _profile_tables(profile)
+    ops_t = jnp.asarray(program.ops)
+    srcA_t = jnp.asarray(program.srcA)
+    srcB_t = jnp.asarray(program.srcB)
+    kindA_t = jnp.asarray(isa.SRC_KIND)[srcA_t]
+    kindB_t = jnp.asarray(isa.SRC_KIND)[srcB_t]
+
+    def one(mem_init, hw: HwConfig):
+        state0 = init_state(mem_init, P)
+        carry0 = (state0, jnp.float32(0.0), jnp.int32(-1))
+
+        def body(carry, _):
+            state, e_acc, prev_pc = carry
+            pc = state.pc
+            live = ~state.done
+            new_state, rec = step(state, hw)
+            # ---- fused case-(vi) estimate (mirrors estimator.py) ----------
+            ops = ops_t[pc]
+            smul = ops == isa.OP["SMUL"]
+            scale = jnp.where(smul, jnp.asarray(hw.smul_power_scale,
+                                                jnp.float32), 1.0)
+            # Timing reuses the simulator's (case-iii-identical) model; the
+            # standalone estimator.py recomputes it independently.
+            busy = rec.busy
+            lat = rec.lat
+            wait = jnp.maximum(lat - busy, 0).astype(jnp.float32)
+            active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
+            gate = jnp.where(smul & ((rec.a == 0) | (rec.b == 0)),
+                             tbl["mulzero"], 1.0)
+            prev_ok = prev_pc >= 0
+            op_ch = prev_ok & (ops != ops_t[jnp.maximum(prev_pc, 0)])
+            a_ch = prev_ok & (srcA_t[pc] != srcA_t[jnp.maximum(prev_pc, 0)])
+            b_ch = prev_ok & (srcB_t[pc] != srcB_t[jnp.maximum(prev_pc, 0)])
+            e_step = (tbl["p_dec"][ops] * scale
+                      + tbl["p_act"][ops] * scale * gate * active
+                      + tbl["p_idle"] * wait
+                      + tbl["e_src"][kindA_t[pc]] + tbl["e_src"][kindB_t[pc]]
+                      + op_ch * tbl["e_sw_op"]
+                      + (a_ch.astype(jnp.float32) + b_ch.astype(jnp.float32))
+                      * tbl["e_sw_mux"]).sum()
+            e_acc = e_acc + jnp.where(live, e_step, 0.0)
+            new_prev = jnp.where(live, pc, prev_pc)
+            return (new_state, e_acc, new_prev), None
+
+        (final, e_uwcc, _), _ = jax.lax.scan(body, carry0, None,
+                                             length=max_steps)
+        lat_cc = final.t_cc
+        energy_pj = e_uwcc * tbl["t_clk_ns"] * 1e-3
+        power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
+        checksum = (final.mem * (jnp.arange(mem_size, dtype=jnp.int32) | 1)
+                    ).sum().astype(jnp.int32)
+        return SweepResult(lat_cc, energy_pj, power_mw, checksum)
+
+    return jax.vmap(one)
+
+
+def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
+          mem_images: np.ndarray, *, mesh: Optional[jax.sharding.Mesh] = None,
+          max_steps: int = 2048, mem_size: int = 4096) -> SweepResult:
+    """Run the (hw x data) grid, optionally sharded over every device of a
+    mesh.  mem_images: (D, mem_size).  Grid is flattened to B = H*D."""
+    H, D = len(hw_configs), mem_images.shape[0]
+    hw_b = stack_configs(list(hw_configs))
+    # broadcast to the full grid
+    hw_grid = jax.tree.map(lambda x: jnp.repeat(x, D, axis=0), hw_b)
+    mem_grid = jnp.asarray(np.tile(mem_images, (H, 1)), jnp.int32)
+    fn = make_sweep_fn(program, profile, max_steps=max_steps,
+                       mem_size=mem_size)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        flat_axes = tuple(mesh.axis_names)
+        sh = NamedSharding(mesh, P(flat_axes))
+        rep = NamedSharding(mesh, P())
+        mem_grid = jax.device_put(mem_grid, sh)
+        hw_grid = jax.tree.map(
+            lambda x: jax.device_put(x, sh) if x.ndim else x, hw_grid)
+        fn = jax.jit(fn, in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
+                     out_shardings=rep)
+    return fn(mem_grid, hw_grid)

@@ -1,0 +1,336 @@
+"""A small automatic mapper: expression DAGs -> time-multiplexed CGRA
+instructions.
+
+The paper motivates its estimator with the difficulty of mapping kernels
+"across a range of PEs and time" (Section 1: compilers "still fall short
+of considering the effect of the whole system").  This module closes the
+authoring loop for straight-line kernels: given a dataflow DAG it emits a
+Program whose simulation equals the DAG's semantics, so the estimator can
+score *machine-generated* mappings as well as hand-written ones.
+
+Scheduling model (deliberately simple, documented limits):
+  * list scheduling by topological level: every DAG node becomes one
+    (instruction, PE) slot;
+  * same-PE chaining is preferred (operand read from own ROUT/register);
+  * a consumer placed on a different PE reads the producer's ROUT via a
+    torus neighbour port if adjacent -- otherwise MV hop instructions are
+    inserted along a torus route;
+  * values needed more than one instruction after production are kept in
+    the producer PE's register file (R0..R3); the register allocator
+    fails loudly on pressure > 4 (no spilling -- kernels that need more
+    should be tiled by the caller);
+  * leaf nodes: constants (immediates) or memory loads (LWD);
+    roots: stores (SWD).
+
+This is not SAT-modulo scheduling [10]; it is the minimal mapper that
+makes the DSE story end-to-end: DAG -> map -> simulate -> estimate ->
+pick hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import isa
+from .isa import OP, PEInstr, asm
+from .program import Program, ProgramBuilder
+
+
+# ---------------------------------------------------------------------------
+# DAG definition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """One dataflow node.
+
+    op:   "const" | "load" | "store" | an ALU opcode name (SADD, SMUL...)
+    args: indices of operand nodes (ALU: 2; store: 1)
+    imm:  constant value (const), or word address (load/store)
+    """
+    op: str
+    args: Tuple[int, ...] = ()
+    imm: int = 0
+
+
+class DAG:
+    def __init__(self):
+        self.nodes: List[Node] = []
+
+    def const(self, v: int) -> int:
+        self.nodes.append(Node("const", (), int(v)))
+        return len(self.nodes) - 1
+
+    def load(self, addr: int) -> int:
+        self.nodes.append(Node("load", (), int(addr)))
+        return len(self.nodes) - 1
+
+    def alu(self, op: str, a: int, b: int) -> int:
+        assert op in OP and OP[op] in isa.ALU_OPS, op
+        self.nodes.append(Node(op, (a, b)))
+        return len(self.nodes) - 1
+
+    def store(self, addr: int, v: int) -> int:
+        self.nodes.append(Node("store", (v,), int(addr)))
+        return len(self.nodes) - 1
+
+    # -- reference semantics -------------------------------------------------
+    def evaluate(self, mem: np.ndarray) -> np.ndarray:
+        """numpy oracle: returns the memory image after all stores."""
+        mem = mem.copy()
+        val: Dict[int, int] = {}
+
+        def w32(x):
+            x &= 0xFFFFFFFF
+            return x - (1 << 32) if x >= (1 << 31) else x
+
+        for i, n in enumerate(self.nodes):
+            if n.op == "const":
+                val[i] = w32(n.imm)
+            elif n.op == "load":
+                val[i] = int(mem[n.imm])
+            elif n.op == "store":
+                mem[n.imm] = val[n.args[0]]
+            else:
+                a, b = val[n.args[0]], val[n.args[1]]
+                sh = b & 31
+                ua = a & 0xFFFFFFFF
+                res = {
+                    "SADD": a + b, "SSUB": a - b, "SMUL": a * b,
+                    "SLL": ua << sh, "SRL": ua >> sh, "SRA": a >> sh,
+                    "LAND": a & b, "LOR": a | b, "LXOR": a ^ b,
+                    "SLT": int(a < b), "MV": a,
+                }[n.op]
+                val[i] = w32(res)
+        return mem
+
+
+# ---------------------------------------------------------------------------
+# Mapper
+# ---------------------------------------------------------------------------
+
+class MappingError(RuntimeError):
+    pass
+
+
+def _levels(dag: DAG) -> List[int]:
+    lvl = [0] * len(dag.nodes)
+    for i, n in enumerate(dag.nodes):
+        lvl[i] = 1 + max((lvl[a] for a in n.args), default=-1)
+    return lvl
+
+
+def _torus_step(pe: int, target: int, rows: int, cols: int) -> int:
+    """One wrap-aware hop from `pe` toward `target` (column first)."""
+    r, c = pe // cols, pe % cols
+    tr, tc = target // cols, target % cols
+    if c != tc:
+        d = (tc - c) % cols
+        c = (c + 1) % cols if d <= cols - d else (c - 1) % cols
+    elif r != tr:
+        d = (tr - r) % rows
+        r = (r + 1) % rows if d <= rows - d else (r - 1) % rows
+    return r * cols + c
+
+
+def map_dag(dag: DAG, *, rows: int = 4, cols: int = 4,
+            name: str = "mapped") -> Program:
+    """Greedy level scheduler with torus routing.
+
+    Every produced value with downstream consumers is parked in a
+    register on its producer PE; cross-PE reads go through ROUT (fresh
+    value or register restore) plus inserted MV hop instructions along a
+    wrap-aware torus route.  Returns a Program ending in EXIT."""
+    P = rows * cols
+    nbr = isa.neighbour_index_maps(rows, cols)
+    port_of: Dict[Tuple[int, int], str] = {}
+    for pname, m in nbr.items():
+        for p in range(P):
+            port_of[(p, int(m[p]))] = pname
+
+    levels = _levels(dag)
+    by_level: Dict[int, List[int]] = {}
+    for i, l in enumerate(levels):
+        by_level.setdefault(l, []).append(i)
+    n_levels = max(levels) + 1 if levels else 0
+
+    remaining_uses = [0] * len(dag.nodes)
+    for n in dag.nodes:
+        for a in n.args:
+            remaining_uses[a] += 1
+
+    pb = ProgramBuilder(P, name)
+    reg_locs: Dict[int, List[Tuple[int, int]]] = {}   # node -> [(pe, reg)]
+    regs_free: Dict[int, List[int]] = {p: [0, 1, 2, 3] for p in range(P)}
+    rout_holder: Dict[int, Optional[int]] = {p: None for p in range(P)}
+    place_pe: Dict[int, int] = {}
+    temp_parked: List[Tuple[int, int, int]] = []      # (node, pe, reg)
+
+    def reg_on(node: int, pe: int) -> Optional[int]:
+        for (q, r) in reg_locs.get(node, ()):
+            if q == pe:
+                return r
+        return None
+
+    def readable(node: int, pe: int) -> Optional[Tuple[str, int]]:
+        n = dag.nodes[node]
+        if n.op == "const":
+            return "IMM", n.imm
+        r = reg_on(node, pe)
+        if r is not None:
+            return f"R{r}", 0
+        if rout_holder.get(pe) == node:
+            return "ROUT", 0
+        for q in range(P):
+            if rout_holder.get(q) == node and (pe, q) in port_of:
+                return port_of[(pe, q)], 0
+        return None
+
+    def _alloc(pe: int) -> int:
+        if not regs_free[pe]:
+            raise MappingError(f"register pressure >4 on PE {pe}")
+        return regs_free[pe].pop(0)
+
+    def route_to(node: int, pe: int):
+        """Make `node` *clobber-proof* readable from `pe`: unless it is a
+        const or already in a register there, hop its value onto `pe` and
+        park it in a temp register (later routing cannot disturb it)."""
+        n = dag.nodes[node]
+        if n.op == "const" or reg_on(node, pe) is not None:
+            return
+        # locate the value in some ROUT or restore from its home register
+        cur = None
+        for q in range(P):
+            if rout_holder.get(q) == node:
+                cur = q
+                break
+        if cur is None:
+            locs = reg_locs.get(node)
+            if not locs:
+                raise MappingError(f"value of node {node} lost")
+            rpe, r = locs[0]
+            pb.instr({rpe: asm("MV", "ROUT", f"R{r}")})
+            rout_holder[rpe] = node
+            cur = rpe
+        guard = 0
+        while cur != pe:
+            guard += 1
+            if guard > 2 * (rows + cols):
+                raise MappingError(f"routing stuck for node {node}")
+            hop = _torus_step(cur, pe, rows, cols)
+            pb.instr({hop: asm("MV", "ROUT", port_of[(hop, cur)])})
+            rout_holder[hop] = node
+            cur = hop
+        r = _alloc(pe)
+        pb.instr({pe: asm("MV", f"R{r}", "ROUT")})
+        rout_holder[pe] = node
+        reg_locs.setdefault(node, []).append((pe, r))
+        temp_parked.append((node, pe, r))
+
+    def choose_pe(i: int, used: set) -> int:
+        prefs = []
+        for a in dag.nodes[i].args:
+            if dag.nodes[a].op == "const":
+                continue
+            locs = reg_locs.get(a)
+            if locs:
+                prefs.append(locs[0][0])
+            elif a in place_pe:
+                prefs.append(place_pe[a])
+        for p in prefs:
+            if p not in used:
+                return p
+        for p in prefs:                      # adjacent to an operand
+            for q in range(P):
+                if q not in used and (q, p) in port_of:
+                    return q
+        for q in range(P):
+            if q not in used:
+                return q
+        raise MappingError("no free PE in level")
+
+    # levels wider than the array are time-multiplexed: split into groups
+    # of <= P nodes (same level => independent, and all cross-group values
+    # are register-parked, so splitting is always safe)
+    groups: List[List[int]] = []
+    for lvl in range(n_levels):
+        level_nodes = [i for i in by_level.get(lvl, [])
+                       if dag.nodes[i].op != "const"]
+        for g0 in range(0, len(level_nodes), P):
+            groups.append(level_nodes[g0:g0 + P])
+
+    for nodes in groups:
+        if not nodes:
+            continue
+        used: set = set()
+        placed: List[Tuple[int, int]] = []
+        for i in nodes:
+            pe = choose_pe(i, used)
+            used.add(pe)
+            place_pe[i] = pe
+            placed.append((i, pe))
+        # route every operand into clobber-proof reach on its consumer PE
+        # -- EXCEPT same-PE fresh ROUT chains, which only hold if nothing
+        # else routes afterwards; conservatively park those too.
+        temp_parked.clear()
+        for i, pe in placed:
+            for a in dag.nodes[i].args:
+                if dag.nodes[a].op != "const":
+                    route_to(a, pe)
+        # emit the compute instruction
+        slots: Dict[int, PEInstr] = {}
+        for i, pe in placed:
+            n = dag.nodes[i]
+            if n.op == "load":
+                slots[pe] = asm("LWD", "ROUT", imm=n.imm)
+            elif n.op == "store":
+                src, _ = readable(n.args[0], pe)
+                slots[pe] = asm("SWD", a=src, imm=n.imm)
+            else:
+                sa, ia = readable(n.args[0], pe)
+                sb, ib = readable(n.args[1], pe)
+                slots[pe] = PEInstr(OP[n.op], isa.DEST_ROUT_ONLY,
+                                    isa.SRC[sa], isa.SRC[sb], ia or ib)
+        # park produced values that have consumers
+        for i, pe in placed:
+            if dag.nodes[i].op == "store":
+                continue
+            if remaining_uses[i] > 0:
+                r = _alloc(pe)
+                reg_locs.setdefault(i, []).append((pe, r))
+                s = slots[pe]
+                slots[pe] = PEInstr(s.op, isa.DEST[f"R{r}"], s.srcA,
+                                    s.srcB, s.imm)
+        pb.instr(slots)
+        for i, pe in placed:
+            if dag.nodes[i].op != "store":
+                rout_holder[pe] = i
+        # free temp copies, consume operand uses, free dead home registers
+        for (node, pe, r) in temp_parked:
+            reg_locs[node].remove((pe, r))
+            regs_free[pe].append(r)
+        temp_parked.clear()
+        for i, _ in placed:
+            for a in dag.nodes[i].args:
+                if dag.nodes[a].op == "const":
+                    continue
+                remaining_uses[a] -= 1
+                if remaining_uses[a] == 0:
+                    for (q, r) in reg_locs.pop(a, ()):
+                        regs_free[q].append(r)
+    pb.exit()
+    return pb.build()
+
+
+def map_and_verify(dag: DAG, mem_init: np.ndarray, **kw):
+    """Map, simulate, and check against the DAG oracle.  Returns
+    (program, final_mem, ok)."""
+    from .cgra import run_program
+    prog = map_dag(dag, **kw)
+    final, _ = run_program(prog, mem_init,
+                           max_steps=prog.n_instrs + 2)
+    want = dag.evaluate(np.asarray(mem_init))
+    got = np.asarray(final.mem)
+    return prog, got, bool((got == want).all())

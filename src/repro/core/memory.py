@@ -1,0 +1,94 @@
+"""Memory-subsystem timing model: bus / bank / DMA contention.
+
+The CGRA shares its data memory with the rest of the MCU; memory operations
+therefore have *system-dependent* latency (paper Table 1, case (iii)).  The
+model below is the one both the detailed reference simulator and the
+case-(iii)+ estimator use -- the paper reports that once memory contention
+is characterized the latency estimate matches post-synthesis exactly, so
+the two paths share one formula by construction.
+
+Mechanics (pipelined issue):
+  * every memory request occupies one *issue slot* on each resource it
+    needs; a resource accepts one new request per cycle;
+  * resources: the DMA engine it goes through (one per column in the
+    baseline, one per PE for mod (d)) and the bus/bank port
+    (single global port for 1-to-M; one port per bank for N-to-M);
+  * requests arbitrate in ascending PE order (greedy list scheduler);
+  * completion cycle = issue_slot + t_mem.
+
+The instruction retires when every PE has finished (lockstep), so the
+instruction's latency is max(ALU latencies, memory completions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hwconfig import BUS_N_TO_M, HwConfig
+
+MAX_BANKS = 16  # static upper bound so bank scoreboards have fixed shape
+
+
+def bank_of(addr: jnp.ndarray, hw: HwConfig, mem_size: int) -> jnp.ndarray:
+    """Bank index of an address under the configured mapping."""
+    n_banks = jnp.asarray(hw.n_banks, jnp.int32)
+    bank_words = jnp.maximum(mem_size // jnp.maximum(n_banks, 1), 1)
+    interleaved = addr % jnp.maximum(n_banks, 1)
+    blocked = jnp.clip(addr // bank_words, 0, n_banks - 1)
+    bank = jnp.where(jnp.asarray(hw.interleaved, jnp.int32) > 0,
+                     interleaved, blocked)
+    # 1-to-M bus: a single global port == everything in "bank 0".
+    return jnp.where(jnp.asarray(hw.bus, jnp.int32) == BUS_N_TO_M, bank, 0)
+
+
+def mem_completion_times(is_mem: jnp.ndarray, addr: jnp.ndarray,
+                         hw: HwConfig, mem_size: int,
+                         cols: int) -> jnp.ndarray:
+    """Per-PE memory completion time (cc from instruction start).
+
+    is_mem: (P,) bool -- PE issues a memory request this instruction
+    addr:   (P,) int32 -- word address of the request
+    Returns (P,) int32; 0 where no request is made.
+
+    Greedy in-order arbitration, implemented as a 16-step lax.scan so it is
+    jit/vmap-friendly (vmap axes: data batch, hardware-config batch).
+    """
+    P = is_mem.shape[0]
+    pe_idx = jnp.arange(P, dtype=jnp.int32)
+    col = pe_idx % cols
+    bank = bank_of(addr, hw, mem_size)
+    dma = jnp.where(jnp.asarray(hw.dma_per_pe, jnp.int32) > 0, pe_idx, col)
+    t_mem = jnp.asarray(hw.t_mem, jnp.int32)
+
+    def arb(carry, x):
+        bank_free, dma_free = carry          # (MAX_BANKS,), (P,)
+        req, b, d = x
+        slot = jnp.maximum(bank_free[b], dma_free[d])
+        bank_free = jnp.where(req, bank_free.at[b].set(slot + 1), bank_free)
+        dma_free = jnp.where(req, dma_free.at[d].set(slot + 1), dma_free)
+        completion = jnp.where(req, slot + t_mem, 0)
+        return (bank_free, dma_free), completion
+
+    init = (jnp.zeros(MAX_BANKS, jnp.int32), jnp.zeros(P, jnp.int32))
+    _, completion = jax.lax.scan(arb, init, (is_mem, bank, dma))
+    return completion
+
+
+def instruction_latency(op_lat: jnp.ndarray, mem_done: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Lockstep retire: latency = max over PEs of (ALU latency | memory
+    completion)."""
+    return jnp.maximum(jnp.max(op_lat), jnp.max(mem_done))
+
+
+def alu_latency_table(hw: HwConfig) -> jnp.ndarray:
+    """Per-opcode busy latency in cc, excluding memory contention.
+
+    All logic/arithmetic ops take 1 cc on OpenEdgeCGRA except SMUL
+    (hw.smul_lat; 3 baseline / 1 for mod (a)).  Memory ops' entries here are
+    placeholders (their true time comes from mem_completion_times).
+    """
+    from .isa import N_OPS, OP
+    lat = jnp.ones(N_OPS, jnp.int32)
+    return lat.at[OP["SMUL"]].set(jnp.asarray(hw.smul_lat, jnp.int32))

@@ -1,0 +1,190 @@
+"""CGRA program container and a small textual assembler.
+
+A ``Program`` is the dense, array-form encoding of a kernel: for each of
+``n_instrs`` CGRA instructions and each of ``n_pes`` processing elements it
+stores (op, dest, srcA, srcB, imm).  The arrays are plain numpy on the host
+and are closed over (as constants) by the jitted simulator.
+
+Two authoring layers:
+  * programmatic: ``ProgramBuilder`` -- used by apps/ to generate
+    parameterized kernels (loop bounds, addresses, ...);
+  * textual: ``assemble`` -- one line per PE slot, used for readability in
+    tests and for the verbatim Figure-4 loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .isa import (DEST, DEST_ROUT_ONLY, NOP_SLOT, OP, OPCODES, PEInstr, SRC)
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """Dense array form of a CGRA kernel."""
+    ops: np.ndarray    # (T, P) int32
+    dest: np.ndarray   # (T, P) int32
+    srcA: np.ndarray   # (T, P) int32
+    srcB: np.ndarray   # (T, P) int32
+    imm: np.ndarray    # (T, P) int32
+    name: str = "kernel"
+
+    @property
+    def n_instrs(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def n_pes(self) -> int:
+        return int(self.ops.shape[1])
+
+    def validate(self) -> "Program":
+        T, P = self.ops.shape
+        for arr, hi in ((self.ops, len(OPCODES)), (self.dest, len(DEST)),
+                        (self.srcA, len(SRC)), (self.srcB, len(SRC))):
+            assert arr.shape == (T, P), "field shape mismatch"
+            assert arr.min() >= 0 and arr.max() < hi, "field out of range"
+        # Branch targets must be within the program.
+        from .isa import IS_BRANCH
+        br = IS_BRANCH[self.ops]
+        if br.any():
+            tgt = self.imm[br]
+            assert tgt.min() >= 0 and tgt.max() < T, (
+                f"branch target out of range in {self.name}")
+        return self
+
+    def slot(self, t: int, p: int) -> PEInstr:
+        return PEInstr(int(self.ops[t, p]), int(self.dest[t, p]),
+                       int(self.srcA[t, p]), int(self.srcB[t, p]),
+                       int(self.imm[t, p]))
+
+
+class ProgramBuilder:
+    """Builds a Program one CGRA instruction at a time.
+
+    >>> pb = ProgramBuilder(n_pes=16, name="demo")
+    >>> i0 = pb.instr({0: asm("SADD", "R0", "R0", "IMM", imm=1)})
+    >>> pb.instr({0: asm("BNE", a="R0", b="IMM", imm=i0), 1: ...})
+    """
+
+    def __init__(self, n_pes: int = 16, name: str = "kernel"):
+        self.n_pes = n_pes
+        self.name = name
+        self._instrs: List[List[PEInstr]] = []
+        self.labels: Dict[str, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._instrs)
+
+    def label(self, name: str) -> int:
+        """Name the *next* instruction index; returns that index."""
+        self.labels[name] = len(self._instrs)
+        return self.labels[name]
+
+    def instr(self, slots: Optional[Dict[int, PEInstr]] = None) -> int:
+        """Append one CGRA instruction; unspecified PEs execute NOP.
+
+        Returns the instruction index (usable as a branch target).
+        """
+        row = [NOP_SLOT] * self.n_pes
+        for pe, s in (slots or {}).items():
+            if not (0 <= pe < self.n_pes):
+                raise ValueError(f"PE index {pe} out of range")
+            row[pe] = s
+        self._instrs.append(row)
+        return len(self._instrs) - 1
+
+    def exit(self, pe: int = 0) -> int:
+        return self.instr({pe: PEInstr(op=OP["EXIT"])})
+
+    def build(self) -> Program:
+        T, P = len(self._instrs), self.n_pes
+        f = lambda attr: np.array(
+            [[getattr(s, attr) for s in row] for row in self._instrs],
+            np.int32)
+        return Program(f("op"), f("dest"), f("srcA"), f("srcB"), f("imm"),
+                       name=self.name).validate()
+
+
+# --------------------------------------------------------------------------
+# Textual assembler
+# --------------------------------------------------------------------------
+#
+# Syntax (one instruction block per "---" separator):
+#
+#   pe3: SADD R0, R1, RCL        ; comment
+#   pe7: SMUL ROUT, R2, IMM #5
+#   pe0: BEQ R0, ZERO @loop
+#   label loop                   ; names the NEXT instruction block
+#
+# dest is optional for branches/stores (they write nothing).
+
+
+def assemble(text: str, n_pes: int = 16, name: str = "kernel") -> Program:
+    pb = ProgramBuilder(n_pes, name)
+    blocks: List[Dict[int, Dict]] = []
+    labels: Dict[str, int] = {}
+
+    lines = [ln.split(";")[0].strip() for ln in text.strip().splitlines()]
+    cur: Dict[int, Dict] = {}
+    for ln in lines:
+        if not ln:
+            continue
+        if ln == "---":
+            blocks.append(cur)
+            cur = {}
+            continue
+        if ln.startswith("label "):
+            # Labels must precede the block they name; they resolve to the
+            # index of the next appended instruction block.
+            labels[ln.split()[1]] = len(blocks)
+            continue
+        pe_part, rest = ln.split(":", 1)
+        pe = int(pe_part.strip()[2:])
+        toks = rest.replace(",", " ").split()
+        op = toks[0].upper()
+        args = toks[1:]
+        imm = 0
+        immref: Optional[str] = None
+        clean: List[str] = []
+        for a in args:
+            if a.startswith("#"):
+                imm = int(a[1:], 0)
+            elif a.startswith("@"):
+                immref = a[1:]
+            else:
+                clean.append(a.upper())
+        dest, a_src, b_src = "ROUT", "ZERO", "ZERO"
+        if op in ("BEQ", "BNE", "BLT", "BGE"):
+            a_src = clean[0] if clean else "ZERO"
+            b_src = clean[1] if len(clean) > 1 else "ZERO"
+        elif op in ("JUMP", "EXIT", "NOP"):
+            pass
+        elif op in ("SWD",):
+            a_src = clean[0] if clean else "ZERO"
+        elif op in ("SWI",):
+            a_src = clean[0] if clean else "ZERO"
+            b_src = clean[1] if len(clean) > 1 else "ZERO"
+        elif op in ("LWD",):
+            dest = clean[0] if clean else "ROUT"
+        elif op in ("LWI", "MV"):
+            dest = clean[0] if clean else "ROUT"
+            a_src = clean[1] if len(clean) > 1 else "ZERO"
+        else:  # 3-address ALU
+            dest = clean[0] if clean else "ROUT"
+            a_src = clean[1] if len(clean) > 1 else "ZERO"
+            b_src = clean[2] if len(clean) > 2 else "ZERO"
+        cur[pe] = dict(op=op, dest=dest, a=a_src, b=b_src, imm=imm,
+                       immref=immref)
+    if cur:
+        blocks.append(cur)
+
+    for block in blocks:
+        slots = {}
+        for pe, d in block.items():
+            imm = labels[d["immref"]] if d["immref"] is not None else d["imm"]
+            slots[pe] = PEInstr.make(d["op"], d["dest"], d["a"], d["b"], imm)
+        pb.instr(slots)
+    prog = pb.build()
+    return dataclasses.replace(prog, name=name).validate()

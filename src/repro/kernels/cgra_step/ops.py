@@ -1,0 +1,21 @@
+"""jit'd wrapper for the batched CGRA ALU-dispatch kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import alu_dispatch
+from .ref import alu_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "blk_b"))
+def batched_alu(ops: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, *,
+                impl: str = "pallas_interpret",
+                blk_b: int = 256) -> jnp.ndarray:
+    """(B, P) int32 opcode/operand planes -> (B, P) results."""
+    if impl == "ref":
+        return alu_ref(ops, a, b)
+    return alu_dispatch(ops, a, b, blk_b=blk_b,
+                        interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,32 @@
+"""jnp oracle for the batched CGRA ALU-dispatch kernel.
+
+Mirrors repro.core.cgra._alu_results but batched: ops/a/b are (B, P)
+int32 (B = design points x data points in a DSE sweep).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import isa
+
+
+def alu_ref(ops: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+            ) -> jnp.ndarray:
+    """(B, P) int32 -> (B, P) int32 results (0 for non-ALU opcodes)."""
+    sh = b & 31
+    z = jnp.zeros_like(a)
+    table = [z] * isa.N_OPS
+    table[isa.OP["SADD"]] = a + b
+    table[isa.OP["SSUB"]] = a - b
+    table[isa.OP["SMUL"]] = a * b
+    table[isa.OP["SLL"]] = jax.lax.shift_left(a, sh)
+    table[isa.OP["SRL"]] = jax.lax.shift_right_logical(a, sh)
+    table[isa.OP["SRA"]] = jax.lax.shift_right_arithmetic(a, sh)
+    table[isa.OP["LAND"]] = a & b
+    table[isa.OP["LOR"]] = a | b
+    table[isa.OP["LXOR"]] = a ^ b
+    table[isa.OP["SLT"]] = (a < b).astype(jnp.int32)
+    table[isa.OP["MV"]] = a
+    stacked = jnp.stack(table)                     # (N_OPS, B, P)
+    return jnp.take_along_axis(stacked, ops[None], axis=0)[0]

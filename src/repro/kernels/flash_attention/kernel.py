@@ -1,0 +1,123 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Online-softmax tiling (Dao 2022) adapted to the TPU memory hierarchy:
+q/k/v blocks live in VMEM via BlockSpec; the (blk_q, blk_k) score tile is
+MXU-shaped (multiples of 128 where the head count allows); the running
+max/denominator and the f32 accumulator are VMEM scratch carried across
+the k-block grid dimension (the innermost, sequential one).
+
+Grid: (B*H, n_q_blocks, n_k_blocks) -- the last axis iterates fastest and
+revisits the same output block, which is the TPU-idiomatic reduction
+pattern (scratch carries state; out is written on the final k step).
+
+Causal/window masking is by absolute position inside the tile; fully
+masked k-blocks are skipped via ``pl.when`` (so the causal kernel does
+~half the work, and a sliding-window kernel touches only O(S*W) tiles).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: Optional[int],
+               blk_q: int, blk_k: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = iq * blk_q
+    k_lo = ik * blk_k
+    # live = this k block intersects the allowed band for some query row
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_lo + blk_q - 1
+    if window is not None:
+        live &= (k_lo + blk_k - 1) > q_lo - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)           # (blk_q, hd)
+        k = k_ref[...].astype(jnp.float32)           # (blk_k, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (blk_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (blk_q, blk_k)
+        alpha = jnp.exp(m_prev - m_new)              # (blk_q, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)           # (blk_k, hd)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: (B, H, S|T, hd) with kv heads pre-expanded; hd should be a
+    multiple of 128 on real TPUs (any size works in interpret mode)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    assert S % blk_q == 0 and T % blk_k == 0, (S, T, blk_q, blk_k)
+    n_q, n_k = S // blk_q, T // blk_k
+    qf = q.reshape(B * H, S, hd)
+    kf = k.reshape(B * H, T, hd)
+    vf = v.reshape(B * H, T, hd)
+    grid = (B * H, n_q, n_k)
+    kernel = functools.partial(
+        _fa_kernel, scale=1.0 / np.sqrt(hd), causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, blk_q, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((None, blk_k, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((None, blk_k, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, hd),
+                               lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),      # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),      # denominator
+            pltpu.VMEM((blk_q, hd), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd)

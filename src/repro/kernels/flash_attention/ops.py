@@ -1,0 +1,46 @@
+"""jit'd public wrapper: model layout (B, S, H, hd) + GQA -> kernel layout.
+
+``attention(q, k, v)`` expands kv heads to the query head count (GQA) and
+dispatches to the Pallas kernel (TPU) or the jnp oracle (CPU fallback /
+verification).  interpret=True executes the kernel body in python on CPU
+-- how the kernel is validated in this container.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, T, KV, hd) -> (B, H, T, hd) repeating each kv head H/KV times."""
+    B, T, KV, hd = k.shape
+    rep = n_heads // KV
+    k = k.transpose(0, 2, 1, 3)                     # (B, KV, T, hd)
+    k = jnp.repeat(k, rep, axis=1)
+    return k
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "blk_q", "blk_k"))
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: Optional[int] = None,
+              impl: str = "pallas_interpret", blk_q: int = 128,
+              blk_k: int = 128) -> jnp.ndarray:
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd).  Returns (B, S, H, hd)."""
+    H = q.shape[2]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = _expand_kv(k, H)
+    vt = _expand_kv(v, H)
+    if impl == "ref":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              blk_q=blk_q, blk_k=blk_k,
+                              interpret=(impl == "pallas_interpret"))
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Layout: q (B, H, S, hd), k/v (B, H, T, hd) -- kv heads pre-expanded to H
+by ops.py (GQA).  Causal + sliding-window masks by absolute position.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Naive materialized-softmax attention; f32 accumulation."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    S, T = logits.shape[-2:]
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,70 @@
+"""Mamba2 intra-chunk SSD as a Pallas TPU kernel.
+
+The chunked SSD algorithm's hot spot is the attention-like intra-chunk
+product: per (batch*chunk, head) an (L, L) decay-masked score matrix hits
+the MXU twice (C.B^T and scores @ x).  The jnp reference materializes the
+(B, nc, L, L, H) decay tensor in HBM; this kernel keeps each head's
+(L, L) tile in VMEM and fuses mask+exp+scale into the matmul pipeline --
+the classic flash-style fusion, applied to SSD (hardware adaptation of
+the paper-adjacent GPU kernels: VMEM tiles + MXU instead of warp tiles).
+
+Grid: (B*nc, H).  Blocks: x (L, P), dt/cum (L, 1) per head, Bm/Cm (L, N).
+L = 64 matches models/ssm.CHUNK; pad L/P/N to 128 on real silicon.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, o_ref, *, L: int):
+    x = x_ref[...].astype(jnp.float32)            # (L, P)
+    dt = dt_ref[...].astype(jnp.float32)          # (L, 1)
+    cum = cum_ref[...].astype(jnp.float32)        # (L, 1)
+    Bm = b_ref[...].astype(jnp.float32)           # (L, N)
+    Cm = c_ref[...].astype(jnp.float32)           # (L, N)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    diff = cum - cum.reshape(1, L)                # cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+    scores = cb * decay * dt.reshape(1, L)        # (L, L), dt_j on columns
+    o_ref[...] = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def intra_chunk(x: jnp.ndarray, dt: jnp.ndarray, cum: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """Batched over (G = B*nc) chunks.
+
+    x (G, L, H, P); dt/cum (G, L, H); Bm/Cm (G, L, N) -> y (G, L, H, P).
+    """
+    G, L, H, P = x.shape
+    N = Bm.shape[-1]
+    xt = x.transpose(0, 2, 1, 3).reshape(G * H, L, P)
+    dtt = dt.transpose(0, 2, 1).reshape(G * H, L, 1)
+    cumt = cum.transpose(0, 2, 1).reshape(G * H, L, 1)
+    # B/C are shared across heads: broadcast to the head-major layout
+    bmt = jnp.broadcast_to(Bm[:, None], (G, H, L, N)).reshape(G * H, L, N)
+    cmt = jnp.broadcast_to(Cm[:, None], (G, H, L, N)).reshape(G * H, L, N)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L),
+        grid=(G * H,),
+        in_specs=[
+            pl.BlockSpec((None, L, P), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, L, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, L, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, L, N), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, L, N), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, L, P), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G * H, L, P), jnp.float32),
+        interpret=interpret,
+    )(xt, dtt, cumt, bmt, cmt)
+    return out.reshape(G, H, L, P).transpose(0, 2, 1, 3)

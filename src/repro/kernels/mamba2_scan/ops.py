@@ -1,0 +1,19 @@
+"""jit'd wrapper for the Mamba2 intra-chunk SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import intra_chunk
+from .ref import intra_chunk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ssd_intra_chunk(x, dt, cum, Bm, Cm, *, impl: str = "pallas_interpret"):
+    """x (G,L,H,P); dt/cum (G,L,H); Bm/Cm (G,L,N) -> (G,L,H,P) f32."""
+    if impl == "ref":
+        return jax.vmap(intra_chunk_ref)(x, dt, cum, Bm, Cm)
+    return intra_chunk(x, dt, cum, Bm, Cm,
+                       interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,21 @@
+"""jnp oracle for the Mamba2 intra-chunk SSD kernel.
+
+One chunk, one head tile:
+  y[i] = sum_{j<=i} (C_i . B_j) * exp(cum_i - cum_j) * dt_j * x_j
+with cum the within-chunk cumulative log-decay.  Shapes:
+  x (L, H, P), dt/cum (L, H), Bm/Cm (L, N)  ->  y (L, H, P)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def intra_chunk_ref(x, dt, cum, Bm, Cm):
+    L = x.shape[0]
+    diff = cum[:, None, :] - cum[None, :, :]           # (L, L, H)
+    mask = np.tril(np.ones((L, L), bool))
+    decay = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("in,jn->ij", Cm, Bm)               # (L, L)
+    scores = cb[:, :, None] * decay * dt[None, :, :]   # (L, L, H)
+    return jnp.einsum("ijh,jhp->ihp", scores, x)

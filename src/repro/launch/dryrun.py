@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first initialization).  Do not reorder.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh with ShapeDtypeStruct stand-ins
+(zero allocation), then extract the roofline raw terms:
+
+  * compiled.memory_analysis()  -> per-device bytes (does it fit?)
+  * compiled.cost_analysis()    -> per-device HLO FLOPs / bytes accessed
+  * compiled.as_text()          -> per-device collective bytes by op kind
+                                   (all-gather / all-reduce / reduce-scatter
+                                   / all-to-all / collective-permute)
+
+Each cell's record is cached as JSON under experiments/dryrun/ -- the
+roofline table (analysis/roofline.py, EXPERIMENTS.md) reads from there.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_archs
+from ..models import SHAPES, make_model, shape_applicable
+from ..models.config import ShapeConfig
+from ..parallel.sharding import (ShardingRules, logical_to_spec, set_rules,
+                                 spec_tree, use_mesh_rules)
+from ..train.optim import AdamWConfig
+from ..train.train_step import make_train_step, state_axes
+from .mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16"
+                       r"|u8|pred)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device payload bytes by collective kind, from the
+    post-partitioning optimized HLO (shapes in SPMD modules are local).
+    Also returns the top payload (kind, dtype[shape]) buckets -- the
+    perf loop's profile."""
+    out = {k: 0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    out_tpu = dict(out)
+    counts = dict.fromkeys(out, 0)
+    buckets = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shapes_part, kind = m.group(1), m.group(2)
+        nbytes = 0
+        key_shape = "?"
+        for i, (dt, dims) in enumerate(_SHAPE_RE.findall(shapes_part)):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt.split("e")[0] if dt.startswith("f8")
+                                     else dt, 4)
+            if i == 0:
+                key_shape = f"{dt}[{dims}]"
+        out[kind] += nbytes
+        counts[kind] += 1
+        # CPU float-normalization promotes bf16 collectives to f32
+        # (reduction computation named ..._promoted); a TPU executes them
+        # natively in bf16, so the wire estimate halves those payloads.
+        tpu_bytes = nbytes // 2 if "promoted" in line else nbytes
+        out_tpu[kind] += tpu_bytes
+        bk = f"{kind} {key_shape}"
+        b = buckets.setdefault(bk, [0, 0])
+        b[0] += nbytes
+        b[1] += 1
+    top = sorted(buckets.items(), key=lambda kv: -kv[1][0])[:10]
+    return (out, counts,
+            {k: {"bytes": v[0], "n": v[1]} for k, v in top}, out_tpu)
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes", "peak_memory_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            d[k] = int(v)
+    return d
+
+
+def _shape_rules(shape: ShapeConfig) -> ShardingRules:
+    return ShardingRules()
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *,
+                    unroll: bool = True, overrides=None):
+    """Returns (fn, args, in_shardings, out_shardings_or_None).
+
+    Layers are unrolled by default so cost_analysis() is trip-count-exact
+    (XLA counts a while body once; see models/scanning.py)."""
+    cfg = get_config(arch).replace(unroll_layers=unroll)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = make_model(cfg)
+    shape = SHAPES[shape_name]
+    rules = _shape_rules(shape)
+    specs, in_axes = model.input_specs(shape)
+
+    def sh(axes_tree, specs_tree):
+        return spec_tree(axes_tree, specs_tree, mesh, rules)
+
+    if shape.kind == "train":
+        opt = AdamWConfig()
+        step = make_train_step(model, opt)
+        pshapes, paxes = model.param_shapes()
+        from ..train.train_step import TrainState
+        from ..train.optim import OptState
+        state_sds = TrainState(
+            params=pshapes,
+            opt=OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                         mu=pshapes, nu=pshapes),
+            ef=None)
+        st_axes = state_axes(paxes)
+        state_sh = sh(st_axes, state_sds)
+        batch_sh = sh(in_axes, specs)
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        metrics_sh = {k: rep for k in ("loss", "nll", "z_loss", "aux",
+                                       "ppl_proxy", "lr", "grad_norm")}
+        fn = step
+        args = (state_sds, specs)
+        in_sh = (state_sh, batch_sh)
+        out_sh = (state_sh, metrics_sh)
+        return fn, args, in_sh, out_sh, model, rules
+
+    pshapes, paxes = model.param_shapes()
+    params_sh = sh(paxes, pshapes)
+    if shape.kind == "prefill":
+        fn = lambda p, b: model.prefill(p, b, context=shape.seq_len)
+        batch_sh = sh(in_axes, specs)
+        args = (pshapes, specs)
+        in_sh = (params_sh, batch_sh)
+        return fn, args, in_sh, None, model, rules
+
+    # decode
+    fn = model.decode
+    cache_sh = sh(in_axes["caches"], specs["caches"])
+    tok_sh = sh(in_axes["tokens"], specs["tokens"])
+    idx_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    args = (pshapes, specs["tokens"], specs["caches"], specs["index"])
+    in_sh = (params_sh, tok_sh, cache_sh, idx_sh)
+    return fn, args, in_sh, None, model, rules
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             force: bool = False, save_hlo: bool = False,
+             overrides=None, suffix: str = "") -> dict:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{mesh_kind}".replace("/", "-")
+    if suffix:
+        tag += f"-{suffix}"
+    path = OUT_DIR / f"{tag}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": mesh_kind + (f"-{suffix}" if suffix else ""),
+           "family": cfg.family, "status": None,
+           "overrides": dict(overrides or {})}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        fn, args, in_sh, out_sh, model, rules = build_lowerable(
+            arch, shape_name, mesh, overrides=overrides)
+        with use_mesh_rules(mesh, rules):
+            jfn = (jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                   if out_sh is not None else
+                   jax.jit(fn, in_shardings=in_sh))
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        mem = _mem_dict(compiled.memory_analysis())
+        hlo = compiled.as_text()
+        coll, coll_n, coll_top, coll_tpu = collective_bytes(hlo)
+        rec.update(
+            status="ok",
+            n_devices=mesh.devices.size,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            flops_per_device=float(cost.get("flops", 0.0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+            memory=mem,
+            collective_bytes=coll,
+            collective_bytes_tpu=coll_tpu,
+            collective_counts=coll_n,
+            collective_top=coll_top,
+            hlo_lines=len(hlo.splitlines()),
+        )
+        if save_hlo:
+            (OUT_DIR / f"{tag}.hlo.txt").write_text(hlo)
+        print(f"[dryrun] OK   {tag}: {t_compile:.1f}s compile, "
+              f"{rec['flops_per_device']:.3e} flops/dev, "
+              f"coll={sum(coll.values())/1e6:.1f} MB/dev", flush=True)
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--suffix", default="",
+                    help="tag suffix for optimized-variant records")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf hillclimb)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        elif v.lstrip("-").isdigit():
+            v = int(v)
+        overrides[k] = v
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force,
+                               save_hlo=args.save_hlo,
+                               overrides=overrides or None,
+                               suffix=args.suffix)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any jax
+initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods =
+    512 chips (pod, data, model); DP rides (pod, data)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n: int | None = None, axes=("data",)):
+    """Whatever devices exist (tests / single host)."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), axes)

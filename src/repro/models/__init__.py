@@ -1,0 +1,4 @@
+"""Model zoo for the assigned architectures."""
+from .config import (LONG_500K, DECODE_32K, PREFILL_32K, TRAIN_4K, SHAPES,
+                     ModelConfig, ShapeConfig, shape_applicable)
+from .model import Model, make_model, lm_loss

@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the brief: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, D); learned positional tables
+replace RoPE (whisper uses absolute learned positions in both stacks).
+Decoder layers carry self-attention (causal, cached for decode) plus
+cross-attention to the encoder output; cross K/V are computed once at
+prefill and stay static through decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .initlib import Builder, dense_init, stack_layer_inits
+from .scanning import maybe_scan
+from .transformer import remat_wrap
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 2)
+    b.sub("ln1", L.init_norm(cfg))
+    b.sub("attn", L.init_attention(ks[0], cfg))
+    b.sub("ln2", L.init_norm(cfg))
+    b.sub("mlp", L.init_mlp(ks[1], cfg))
+    return b.build()
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 3)
+    b.sub("ln1", L.init_norm(cfg))
+    b.sub("self_attn", L.init_attention(ks[0], cfg))
+    b.sub("ln_x", L.init_norm(cfg))
+    b.sub("cross_attn", L.init_attention(ks[1], cfg))
+    b.sub("ln2", L.init_norm(cfg))
+    b.sub("mlp", L.init_mlp(ks[2], cfg))
+    return b.build()
+
+
+def init_params(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 6)
+    b.sub("embed", L.init_embedding(ks[0], cfg))
+    b.put("enc_pos", dense_init(ks[1], (cfg.enc_seq, cfg.d_model),
+                                (None, "embed")))
+    b.put("dec_pos", dense_init(ks[2], (1 << 16, cfg.d_model),
+                                (None, "embed")))
+    b.sub("enc_layers", stack_layer_inits(init_enc_layer, ks[3],
+                                          cfg.n_enc_layers, cfg))
+    b.sub("ln_enc", L.init_norm(cfg))
+    b.sub("dec_layers", stack_layer_inits(init_dec_layer, ks[4],
+                                          cfg.n_layers, cfg))
+    b.sub("ln_f", L.init_norm(cfg))
+    return b.build()
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, enc_seq, D) stub-frontend embeddings -> (B, enc_seq, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + params["enc_pos"][None, :x.shape[1]].astype(x.dtype)
+
+    def body(pl, x):
+        h, _ = L.attention_forward(pl["attn"], cfg,
+                                   L.apply_norm(pl["ln1"], cfg, x),
+                                   causal=False, use_rope=False)
+        x = x + h
+        return x + L.apply_mlp(pl["mlp"], cfg,
+                               L.apply_norm(pl["ln2"], cfg, x))
+
+    body = remat_wrap(body, cfg)
+    x, _ = maybe_scan(lambda x, pl: (body(pl, x), None), x,
+                      params["enc_layers"], cfg.unroll_layers)
+    return L.apply_norm(params["ln_enc"], cfg, x)
+
+
+def _dec_layer(pl, cfg, x, enc_out):
+    h, _ = L.attention_forward(pl["self_attn"], cfg,
+                               L.apply_norm(pl["ln1"], cfg, x),
+                               causal=True, use_rope=False)
+    x = x + h
+    h, _ = L.attention_forward(pl["cross_attn"], cfg,
+                               L.apply_norm(pl["ln_x"], cfg, x),
+                               causal=False, xkv=enc_out, use_rope=False)
+    x = x + h
+    return x + L.apply_mlp(pl["mlp"], cfg, L.apply_norm(pl["ln2"], cfg, x))
+
+
+def forward(params, cfg: ModelConfig, tokens, frames):
+    """Teacher-forced training forward -> (B, S, Vpad) logits."""
+    enc_out = encode(params, cfg, frames)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    S = tokens.shape[1]
+    x = x + params["dec_pos"][None, :S].astype(x.dtype)
+    body = remat_wrap(
+        lambda pl, x: _dec_layer(pl, cfg, x, enc_out), cfg)
+    x, _ = maybe_scan(lambda x, pl: (body(pl, x), None), x,
+                      params["dec_layers"], cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    return L.logits_from_hidden(params["embed"], cfg, x), jnp.float32(0.0)
+
+
+class EncDecCaches(NamedTuple):
+    kv: L.KVCache          # (L_dec, ...) decoder self-attn
+    enc_k: jnp.ndarray     # (L_dec, B, enc_seq, KV, hd)
+    enc_v: jnp.ndarray
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames, *, context: int):
+    enc_out = encode(params, cfg, frames)
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    S = tokens.shape[1]
+    x = x + params["dec_pos"][None, :S].astype(x.dtype)
+
+    def one(x, pl):
+        h, (k, v) = L.attention_forward(
+            pl["self_attn"], cfg, L.apply_norm(pl["ln1"], cfg, x),
+            causal=True, use_rope=False)
+        x = x + h
+        h, (ek, ev) = L.attention_forward(
+            pl["cross_attn"], cfg, L.apply_norm(pl["ln_x"], cfg, x),
+            causal=False, xkv=enc_out, use_rope=False)
+        x = x + h
+        x = x + L.apply_mlp(pl["mlp"], cfg, L.apply_norm(pl["ln2"], cfg, x))
+        return x, (L.cache_from_prefill(cfg, k, v, context), ek, ev)
+
+    x, (kv, enc_k, enc_v) = maybe_scan(one, x, params["dec_layers"],
+                                       cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x[:, -1:])
+    logits = L.logits_from_hidden(params["embed"], cfg, x)
+    return logits, EncDecCaches(kv=kv, enc_k=enc_k, enc_v=enc_v)
+
+
+def init_caches(cfg: ModelConfig, batch: int, context: int,
+                dtype=None) -> EncDecCaches:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = L.init_kv_cache(cfg, batch, context, dtype)
+    kv = L.KVCache(*jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one))
+    e = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads,
+                   cfg.hd), dtype)
+    return EncDecCaches(kv=kv, enc_k=e, enc_v=e)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches: EncDecCaches,
+                index):
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"], index, 1, 0)[None].astype(x.dtype)
+
+    def one(x, inp):
+        pl, cache, ek, ev = inp
+        h, new_cache = L.attention_decode(
+            pl["self_attn"], cfg, L.apply_norm(pl["ln1"], cfg, x), cache,
+            index, use_rope=False)      # whisper: learned abs positions
+        x = x + h
+        h, _ = L.attention_decode(
+            pl["cross_attn"], cfg, L.apply_norm(pl["ln_x"], cfg, x), cache,
+            index, enc_kv=(ek.astype(x.dtype), ev.astype(x.dtype)),
+            use_rope=False)
+        x = x + h
+        x = x + L.apply_mlp(pl["mlp"], cfg, L.apply_norm(pl["ln2"], cfg, x))
+        return x, new_cache
+
+    x, kv = maybe_scan(one, x, (params["dec_layers"], caches.kv,
+                                caches.enc_k, caches.enc_v),
+                       cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    logits = L.logits_from_hidden(params["embed"], cfg, x)
+    return logits, EncDecCaches(kv=kv, enc_k=caches.enc_k,
+                                enc_v=caches.enc_v)

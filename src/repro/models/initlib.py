@@ -1,0 +1,77 @@
+"""Parameter initialization helpers.
+
+Every ``init_*`` in the model zoo returns a ``(params, axes)`` pair: two
+parallel pytrees, the second holding a tuple of *logical* dimension names
+per array (consumed by parallel.sharding to derive PartitionSpecs).  This
+keeps sharding metadata attached to construction instead of relying on
+name-pattern matching over parameter paths.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def trunc_normal(key, shape, scale: float, dtype=jnp.float32):
+    """Truncated-normal (±2 sigma) init, fan-in scaled by the caller."""
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                               jnp.float32).astype(dtype)
+
+
+def dense_init(key, shape: Sequence[int], axes: Sequence[Optional[str]],
+               *, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else int(np.prod(shape[:-1]))
+    w = trunc_normal(key, tuple(shape), scale=1.0 / np.sqrt(max(fan, 1)),
+                     dtype=dtype)
+    return w, tuple(axes)
+
+
+def zeros_init(shape: Sequence[int], axes: Sequence[Optional[str]],
+               dtype=jnp.float32):
+    return jnp.zeros(tuple(shape), dtype), tuple(axes)
+
+
+def ones_init(shape: Sequence[int], axes: Sequence[Optional[str]],
+              dtype=jnp.float32):
+    return jnp.ones(tuple(shape), dtype), tuple(axes)
+
+
+class Builder:
+    """Accumulates a (params, axes) pair with nested sub-scopes."""
+
+    def __init__(self):
+        self.params: Dict = {}
+        self.axes: Dict = {}
+
+    def put(self, name: str, pair):
+        w, ax = pair
+        self.params[name] = w
+        self.axes[name] = ax
+        return w
+
+    def sub(self, name: str, pair_or_builder):
+        if isinstance(pair_or_builder, Builder):
+            self.params[name] = pair_or_builder.params
+            self.axes[name] = pair_or_builder.axes
+        else:
+            p, a = pair_or_builder
+            self.params[name] = p
+            self.axes[name] = a
+
+    def build(self) -> Tuple[Dict, Dict]:
+        return self.params, self.axes
+
+
+def stack_layer_inits(init_fn, key, n_layers: int, *args, **kw):
+    """vmap an ``init(key) -> (params, axes)`` over layer keys; the axes
+    gain a leading "layers" (None) dim."""
+    keys = jax.random.split(key, n_layers)
+    params = jax.vmap(lambda k: init_fn(k, *args, **kw)[0])(keys)
+    _, axes = init_fn(keys[0], *args, **kw)
+    axes = jax.tree.map(lambda a: (None,) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+    return params, axes

@@ -1,0 +1,421 @@
+"""Shared neural building blocks for the assigned architectures.
+
+Pure-functional: every block is an ``init_*(key, cfg) -> (params, axes)``
+plus an ``apply`` function.  Activation tensors are annotated with logical
+sharding names via ``parallel.sharding.constrain`` (identity on 1 device).
+
+Attention covers every assigned variant: MHA/GQA, RoPE / M-RoPE (qwen2-vl)
+/ NoPE, sliding-window (mixtral, starcoder2), cross-attention (whisper
+decoder), KV-cache decode with either a full cache or a ring buffer
+(bounded window cache -- what makes SWA archs long_500k-capable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .initlib import Builder, dense_init, ones_init, zeros_init
+
+NEG_INF = -1e9
+
+
+def cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def seq_ax(cfg: ModelConfig):
+    """Logical name of the *residual-stream* sequence dim: sharded over
+    the model axis under sequence parallelism (cfg.seq_shard).  Megatron-SP
+    placement: the residual stream (norm/elementwise segments) is
+    seq-sharded; the attention/MLP interiors keep their tensor-parallel
+    sharding, and GSPMD turns the boundary psums into reduce-scatter +
+    all-gather pairs."""
+    return "seq_sp" if cfg.seq_shard else None
+
+
+def seq_ax_interior(cfg: ModelConfig):
+    """Interior (q/scores/mlp-hidden) seq name: only seq-sharded when
+    there is no usable head TP (attn_tp=head_dim archs go fully
+    sequence-parallel; see smollm/whisper/qwen configs)."""
+    return seq_ax(cfg) if cfg.attn_tp == "head_dim" else None
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    ax = (None,) if cfg.norm_param_replicated else ("embed_tp",)
+    b = Builder()
+    if cfg.norm == "rmsnorm":
+        b.put("scale", ones_init((d,), ax))
+    elif cfg.norm == "layernorm":
+        b.put("scale", ones_init((d,), ax))
+        b.put("bias", zeros_init((d,), ax))
+    # nonparam_ln (olmo): no parameters
+    return b.build()
+
+
+def apply_norm(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.bf16_elementwise and x.dtype != jnp.float32:
+        # f32 statistics, working-dtype multiplies: cotangents through the
+        # (B,S,D) product stay bf16, halving backward-psum bytes.
+        xf = x.astype(jnp.float32)
+        if cfg.norm == "rmsnorm":
+            s = jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+            y = x * s.astype(x.dtype)
+            return y * p["scale"].astype(x.dtype)
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (x - mu.astype(x.dtype)) * jax.lax.rsqrt(
+            var + 1e-5).astype(x.dtype)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+        return y
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(
+                jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _inv_freq(hd: int, theta: float) -> jnp.ndarray:
+    return jnp.asarray(theta, jnp.float32) ** (
+        -jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+
+
+def rope_cos_sin(positions: jnp.ndarray, hd: int, theta: float,
+                 mrope_sections: Optional[Tuple[int, int, int]] = None):
+    """positions: (B, S) int32, or (B, S, 3) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the hd/2 frequency slots are split into
+    (temporal, height, width) sections, each driven by its own position
+    component; pure text uses identical components, degenerating to 1-D
+    RoPE exactly.
+    Returns cos/sin of shape (B, S, 1, hd//2) (head-broadcastable).
+    """
+    inv = _inv_freq(hd, theta)                      # (hd/2,)
+    if positions.ndim == 3:
+        t, h, w = mrope_sections
+        assert t + h + w == hd // 2, "mrope sections must cover head_dim/2"
+        sec = jnp.concatenate([jnp.full((t,), 0, jnp.int32),
+                               jnp.full((h,), 1, jnp.int32),
+                               jnp.full((w,), 2, jnp.int32)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec[None, None, :], positions.shape[:2]
+                             + (hd // 2,)), axis=2)  # (B,S,hd/2)
+        ang = pos * inv[None, None, :]
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               bf16_mul: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, hd); rotate-half convention.  Angles are always f32;
+    bf16_mul does the rotation in the working dtype (see
+    cfg.bf16_elementwise)."""
+    half = x.shape[-1] // 2
+    if bf16_mul and x.dtype != jnp.float32:
+        x1 = x[..., :half]
+        x2 = x[..., half:]
+        c = cos.astype(x.dtype)
+        s = sin.astype(x.dtype)
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Decode-time cache.  ``k``/``v``: (B, C, KV, hd) where C = full
+    context for dense archs or the window size for SWA archs (ring
+    buffer).  ``pos``: (B, C) absolute positions (-1 = empty slot)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    hd = cfg.hd
+    b = Builder()
+    ks = jax.random.split(key, 5)
+    if cfg.attn_tp == "heads":
+        h_axes = ("embed", "heads", "head_dim")
+        kv_axes = ("embed", "kv_heads", "head_dim")
+        o_axes = ("heads", "head_dim", "embed")
+    else:  # head_dim TP: heads replicated, hd sharded
+        h_axes = ("embed", None, "head_dim_tp")
+        kv_axes = ("embed", None, "head_dim_tp")
+        o_axes = (None, "head_dim_tp", "embed")
+    b.put("wq", dense_init(ks[0], (cfg.d_model, cfg.n_heads, hd), h_axes,
+                           fan_in=cfg.d_model))
+    b.put("wk", dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), kv_axes,
+                           fan_in=cfg.d_model))
+    b.put("wv", dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), kv_axes,
+                           fan_in=cfg.d_model))
+    b.put("wo", dense_init(ks[3], (cfg.n_heads, hd, cfg.d_model), o_axes,
+                           fan_in=cfg.n_heads * hd))
+    if cfg.qkv_bias:
+        b.put("bq", zeros_init((cfg.n_heads, hd), h_axes[1:]))
+        b.put("bk", zeros_init((cfg.n_kv_heads, hd), kv_axes[1:]))
+        b.put("bv", zeros_init((cfg.n_kv_heads, hd), kv_axes[1:]))
+    return b.build()
+
+
+def _qkv(p, cfg: ModelConfig, x, xkv=None):
+    xkv = x if xkv is None else xkv
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale):
+    """q: (B,S,H,hd), k: (B,T,KV,hd) -> logits (B,KV,G,S,T), G = H//KV."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    return jnp.einsum("bskgh,btkh->bkgst", qg, k) * scale
+
+
+def _gqa_combine(probs, v):
+    """probs: (B,KV,G,S,T), v: (B,T,KV,hd) -> (B,S,H,hd)."""
+    B, KV, G, S, T = probs.shape
+    y = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return y.reshape(B, S, KV * G, v.shape[-1])
+
+
+def causal_window_mask(s: int, t: int, window: Optional[int],
+                       offset: int = 0) -> jnp.ndarray:
+    """(s, t) bool mask; query i attends key j iff j <= i+offset and
+    (no window or i+offset - j < window)."""
+    qi = jnp.arange(s)[:, None] + offset
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= (qi - kj) < window
+    return m
+
+
+# Above this many query positions, attention runs in query blocks so the
+# (S, T) score tensor never materializes whole (the jnp stand-in for the
+# Pallas flash kernel; blocks are a python loop => cost_analysis-exact).
+QBLOCK_THRESHOLD = 8192
+QBLOCK = 4096
+
+
+def _attend(q, k, v, cfg, causal, window, offset=0):
+    logits = _gqa_scores(q, k, 1.0 / np.sqrt(cfg.hd)).astype(jnp.float32)
+    if causal:
+        m = causal_window_mask(q.shape[1], k.shape[1], window, offset)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return _gqa_combine(probs, v)
+
+
+def attention_forward(p, cfg: ModelConfig, x, *, positions=None,
+                      causal: bool = True, xkv=None,
+                      window: Optional[int] = None,
+                      use_rope: bool = True):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (y, (k, v)) -- k/v are returned so prefill can build a cache
+    and the whisper decoder can reuse encoder projections.
+    """
+    q, k, v = _qkv(p, cfg, x, xkv)
+    if use_rope:
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                x.shape[:2])
+        cos, sin = rope_cos_sin(positions, cfg.hd, cfg.rope_theta,
+                                cfg.mrope_sections if cfg.mrope else None)
+        q = apply_rope(q, cos, sin, cfg.bf16_elementwise)
+        if xkv is None:
+            k = apply_rope(k, cos, sin, cfg.bf16_elementwise)
+    q = constrain(q, "batch", seq_ax_interior(cfg), "act_heads", None)
+    k = constrain(k, "batch", None, "act_kv", None)
+    S = q.shape[1]
+    if S <= QBLOCK_THRESHOLD or S % QBLOCK != 0:
+        y = _attend(q, k, v, cfg, causal, window)
+    else:
+        blocks = []
+        for i in range(S // QBLOCK):
+            qb = jax.lax.slice_in_dim(q, i * QBLOCK, (i + 1) * QBLOCK,
+                                      axis=1)
+            if causal:  # keys beyond the block's last query never attend
+                kv_hi = (i + 1) * QBLOCK
+                kb = jax.lax.slice_in_dim(k, 0, kv_hi, axis=1)
+                vb = jax.lax.slice_in_dim(v, 0, kv_hi, axis=1)
+            else:
+                kb, vb = k, v
+            blocks.append(_attend(qb, kb, vb, cfg, causal, window,
+                                  offset=i * QBLOCK))
+        y = jnp.concatenate(blocks, axis=1)
+    y = constrain(y, "batch", seq_ax_interior(cfg), "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    return constrain(out, "batch", seq_ax(cfg), "act_embed"), (k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, context: int,
+                  dtype) -> KVCache:
+    """context = min(seq, window) for SWA archs: the ring buffer bounds
+    decode memory regardless of sequence length."""
+    c = context if cfg.window is None else min(context, cfg.window)
+    shape = (batch, c, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.full((batch, c), -1, jnp.int32))
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, index,
+                     *, enc_kv=None, use_rope: bool = True):
+    """One-token decode.  x: (B, 1, D); index: () int32 absolute position.
+
+    Dense archs: slot = index (full cache).  SWA archs: slot = index mod
+    window (ring buffer); masking is by *absolute position* stored in
+    cache.pos, so ring overwrites are handled exactly.
+    """
+    if enc_kv is not None:     # cross-attention decode: static memory
+        q, _, _ = _qkv(p, cfg, x)
+        k, v = enc_kv
+        logits = _gqa_scores(q, k, 1.0 / np.sqrt(cfg.hd)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+        y = _gqa_combine(probs, v)
+        out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+        return out, cache
+    B = x.shape[0]
+    pos = jnp.broadcast_to(index.astype(jnp.int32)[None, None], (B, 1))
+    q, k, v = _qkv(p, cfg, x)
+    if use_rope:
+        cos, sin = rope_cos_sin(pos if not cfg.mrope else
+                                jnp.repeat(pos[..., None], 3, -1),
+                                cfg.hd, cfg.rope_theta,
+                                cfg.mrope_sections if cfg.mrope else None)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    C = cache.k.shape[1]
+    slot = (index % C).astype(jnp.int32)
+    k_new = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    pos_new = jax.lax.dynamic_update_slice(cache.pos, pos, (0, slot))
+    logits = _gqa_scores(q, k_new.astype(x.dtype),
+                         1.0 / np.sqrt(cfg.hd)).astype(jnp.float32)
+    valid = (pos_new >= 0) & (pos_new <= index)
+    if cfg.window is not None:
+        valid &= pos_new > index - cfg.window
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, -1).astype(x.dtype)
+    y = _gqa_combine(probs, v_new.astype(x.dtype))
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(x.dtype))
+    return out, KVCache(k_new, v_new, pos_new)
+
+
+def cache_from_prefill(cfg: ModelConfig, k, v, context: int) -> KVCache:
+    """Build a decode cache from prefill-computed k/v (keeping the last
+    `window` positions for SWA archs)."""
+    B, S = k.shape[0], k.shape[1]
+    C = context if cfg.window is None else min(context, cfg.window)
+    kk, vv = k[:, -C:], v[:, -C:]
+    pos = jnp.broadcast_to(jnp.arange(S - kk.shape[1], S, dtype=jnp.int32)
+                           [None], (B, kk.shape[1]))
+    pad = C - kk.shape[1]
+    if pad > 0:
+        kk = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    return KVCache(kk, vv, pos)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    b = Builder()
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        b.put("wg", dense_init(ks[0], (cfg.d_model, d_ff), ("embed", "mlp")))
+        b.put("wu", dense_init(ks[1], (cfg.d_model, d_ff), ("embed", "mlp")))
+    else:
+        b.put("wu", dense_init(ks[1], (cfg.d_model, d_ff), ("embed", "mlp")))
+    b.put("wd", dense_init(ks[2], (d_ff, cfg.d_model), ("mlp", "embed"),
+                           fan_in=d_ff))
+    return b.build()
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        h = jax.nn.gelu(u)
+    h = constrain(h, "batch", seq_ax_interior(cfg), "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(dt))
+    return constrain(y, "batch", seq_ax(cfg), "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 2)
+    b.put("table", dense_init(ks[0], (cfg.vocab_padded, cfg.d_model),
+                              ("vocab", "embed"), fan_in=cfg.d_model))
+    if not cfg.tie_embeddings:
+        b.put("head", dense_init(ks[1], (cfg.d_model, cfg.vocab_padded),
+                                 ("embed", "vocab")))
+    return b.build()
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens):
+    x = jnp.take(p["table"], tokens, axis=0).astype(cdt(cfg))
+    return constrain(x, "batch", seq_ax(cfg), "act_embed")
+
+
+def logits_from_hidden(p, cfg: ModelConfig, x):
+    w = (p["table"].T if cfg.tie_embeddings else p["head"])
+    out = jnp.einsum("bsd,dv->bsv", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    # mask padded vocabulary columns so log-sum-exp is exact
+    if cfg.vocab_padded != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        out = jnp.where(mask[None, None, :], NEG_INF, out)
+    return constrain(out, "batch", seq_ax(cfg), "vocab")

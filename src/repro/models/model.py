@@ -1,0 +1,225 @@
+"""Unified model API over the six families + input specs for every
+(arch x shape) cell.
+
+``Model`` exposes:
+  init(key)                  -> (params, axes)      axes = logical dim names
+  loss(params, batch)        -> (loss, metrics)     training objective
+  prefill(params, batch)     -> (logits, caches)
+  decode(params, tokens, caches, index) -> (logits, caches)
+  init_caches(batch, context)
+  input_specs(shape)         -> (tree of ShapeDtypeStruct, tree of axes)
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable
+stand-ins for every input, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encdec, hybrid, layers
+from . import transformer as tfm
+from . import xlstm_model
+from .config import ModelConfig, ShapeConfig
+from .ssm import SSMState
+from .xlstm import MLSTMState, SLSTMState
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            aux: jnp.ndarray, z_coef: float = 1e-4,
+            ce_impl: str = "gather"):
+    """Token-mean cross entropy (+ router aux + z-loss), f32 throughout.
+
+    Padded vocab columns carry -1e9 logits so the log-sum-exp is exact.
+    ce_impl="onehot" contracts the vocab dim instead of gathering it --
+    on a vocab-sharded mesh the gather would all-gather the full logits
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    if ce_impl == "onehot":
+        oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+        ll = jnp.einsum("bsv,bsv->bs", logits, oh)
+    else:
+        ll = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0]
+    nll = jnp.mean(lse - ll)
+    zl = z_coef * jnp.mean(jnp.square(lse))
+    loss = nll + zl + aux
+    return loss, {"loss": loss, "nll": nll, "z_loss": zl, "aux": aux,
+                  "ppl_proxy": jnp.exp(jnp.minimum(nll, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# Family dispatch
+# ---------------------------------------------------------------------------
+
+_FAMILY = {
+    "dense": tfm, "moe": tfm, "vlm": tfm,
+    "encdec": encdec, "hybrid": hybrid, "ssm": xlstm_model,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _FAMILY[self.cfg.family]
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key) -> Tuple[Any, Any]:
+        return self.mod.init_params(key, self.cfg)
+
+    def param_shapes(self) -> Tuple[Any, Any]:
+        """(ShapeDtypeStruct tree, axes tree) without allocating.  The
+        axes (static python strings) are captured by closure side effect
+        while the params are traced abstractly."""
+        box = {}
+
+        def f(k):
+            p, a = self.init(k)
+            box["axes"] = a
+            return p
+
+        p = jax.eval_shape(f, jax.random.key(0))
+        return p, box["axes"]
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            logits, aux = encdec.forward(params, cfg, batch["tokens"],
+                                         batch["frames"])
+        elif cfg.family == "vlm":
+            logits, aux = tfm.forward(params, cfg, batch["tokens"],
+                                      positions=batch.get("positions"),
+                                      patch_embeds=batch.get("patch_embeds"))
+        else:
+            logits, aux = self.mod.forward(params, cfg, batch["tokens"])
+        return lm_loss(logits, batch["labels"], aux,
+                       ce_impl=cfg.ce_impl)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jnp.ndarray], *,
+                context: Optional[int] = None):
+        cfg = self.cfg
+        context = context or batch["tokens"].shape[1]
+        if cfg.family == "encdec":
+            return encdec.prefill(params, cfg, batch["tokens"],
+                                  batch["frames"], context=context)
+        if cfg.family == "vlm":
+            return tfm.prefill(params, cfg, batch["tokens"],
+                               context=context,
+                               patch_embeds=batch.get("patch_embeds"))
+        return self.mod.prefill(params, cfg, batch["tokens"],
+                                context=context)
+
+    def decode(self, params, tokens, caches, index):
+        return self.mod.decode_step(params, self.cfg, tokens, caches, index)
+
+    def init_caches(self, batch: int, context: int):
+        return self.mod.init_caches(self.cfg, batch, context)
+
+    def cache_batch_axes(self):
+        """Per-leaf batch-axis index of the cache pytree (for slot splicing
+        in the serving layer)."""
+        cfg = self.cfg
+        kv1 = layers.KVCache(k=1, v=1, pos=1)
+        if cfg.family in ("dense", "moe", "vlm"):
+            return tfm.DecoderCaches(kv=kv1)
+        if cfg.family == "encdec":
+            return encdec.EncDecCaches(kv=kv1, enc_k=1, enc_v=1)
+        if cfg.family == "hybrid":
+            return hybrid.HybridCaches(
+                ssm=SSMState(h=2, conv=2), kv=kv1)
+        return xlstm_model.XLSTMCaches(
+            m=MLSTMState(C=1, n=1, m=1),
+            s=SLSTMState(c=1, n=1, m=1, h=1))
+
+    def splice_cache(self, caches, cache_one, slot: int):
+        """Write request `cache_one` (batch=1) into batch slot `slot`."""
+        def one(full, new, ax):
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slot
+            new_sq = jnp.squeeze(new, axis=ax)
+            return full.at[tuple(idx)].set(new_sq.astype(full.dtype))
+
+        return jax.tree.map(one, caches, cache_one,
+                            self.cache_batch_axes())
+
+    # -- dry-run input contract ----------------------------------------------
+    def cache_axes(self):
+        cfg = self.cfg
+        kv_ax = layers.KVCache(
+            k=(None, "cache_batch", "cache_seq", "cache_heads", None),
+            v=(None, "cache_batch", "cache_seq", "cache_heads", None),
+            pos=(None, "cache_batch", "cache_seq"))
+        if cfg.family in ("dense", "moe", "vlm"):
+            return tfm.DecoderCaches(kv=kv_ax)
+        if cfg.family == "encdec":
+            e = (None, "cache_batch", None, "cache_heads", None)
+            return encdec.EncDecCaches(kv=kv_ax, enc_k=e, enc_v=e)
+        if cfg.family == "hybrid":
+            ssm_ax = SSMState(
+                h=(None, None, "cache_batch", "ssm_heads", None, None),
+                conv=(None, None, "cache_batch", None, "ssm_inner"))
+            return hybrid.HybridCaches(ssm=ssm_ax, kv=kv_ax)
+        m_ax = MLSTMState(C=(None, "cache_batch", "heads", None, None),
+                          n=(None, "cache_batch", "heads", None),
+                          m=(None, "cache_batch", "heads"))
+        s_ax = SLSTMState(c=(None, "cache_batch", "embed_tp"),
+                          n=(None, "cache_batch", "embed_tp"),
+                          m=(None, "cache_batch", "embed_tp"),
+                          h=(None, "cache_batch", "embed_tp"))
+        return xlstm_model.XLSTMCaches(m=m_ax, s=s_ax)
+
+    def input_specs(self, shape: ShapeConfig):
+        """Stand-ins + logical axes for every input of the lowered step."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: SDS((b, s), jnp.int32)
+        act = jnp.dtype(cfg.dtype)
+        specs: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            specs["tokens"] = tok(B, S)
+            axes["tokens"] = ("batch", None)
+            if shape.kind == "train":
+                specs["labels"] = tok(B, S)
+                axes["labels"] = ("batch", None)
+            if cfg.family == "encdec":
+                specs["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), act)
+                axes["frames"] = ("batch", None, None)
+            if cfg.family == "vlm":
+                specs["patch_embeds"] = SDS((B, cfg.n_patches, cfg.d_model),
+                                            act)
+                axes["patch_embeds"] = ("batch", None, None)
+                if shape.kind == "train":
+                    specs["positions"] = SDS((B, S, 3), jnp.int32)
+                    axes["positions"] = ("batch", None, None)
+            return specs, axes
+        # decode: one new token against a context-length cache
+        specs["tokens"] = tok(B, 1)
+        axes["tokens"] = ("batch", None)
+        specs["caches"] = jax.eval_shape(
+            lambda: self.init_caches(B, S))
+        axes["caches"] = self.cache_axes()
+        specs["index"] = SDS((), jnp.int32)
+        axes["index"] = ()
+        return specs, axes
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg.validate())

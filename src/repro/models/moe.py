@@ -1,0 +1,107 @@
+"""Mixture-of-Experts layer (granite-moe 32e/top-8, mixtral 8e/top-2).
+
+GShard/Switch-style capacity-based dispatch expressed as dense einsums --
+the formulation GSPMD shards well: the expert dim is EP-sharded when it
+divides the model axis (granite: 32/16 = 2 experts per device; the
+dispatch/combine einsums lower to all-to-alls), and falls back to
+TP-sharded expert FFNs when it does not (mixtral: 8 experts < 16-way axis;
+experts replicated, d_ff sharded -- see parallel.sharding fallback chain).
+
+Routing: softmax-then-top-k with renormalized combine weights, plus the
+standard load-balance auxiliary loss (Switch eq. 4..6).  Tokens beyond an
+expert's capacity are dropped (contribute zero); capacity_factor sizes the
+slack.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .initlib import Builder, dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    b.put("router", dense_init(ks[0], (D, E), ("embed_tp", None)))
+    if cfg.act == "swiglu":
+        b.put("wg", dense_init(ks[1], (E, D, F),
+                               ("experts", "embed", "expert_mlp"),
+                               fan_in=D))
+    b.put("wu", dense_init(ks[2], (E, D, F),
+                           ("experts", "embed", "expert_mlp"), fan_in=D))
+    b.put("wd", dense_init(ks[3], (E, F, D),
+                           ("experts", "expert_mlp", "embed"), fan_in=F))
+    return b.build()
+
+
+def _topk_dispatch(probs: jnp.ndarray, top_k: int, capacity: int):
+    """probs: (B, S, E) -> dispatch (B,S,E,C) one-hot, combine (B,S,E,C).
+
+    Iterative top-k: mask out chosen experts between iterations; per-expert
+    queue positions via cumulative sums in flat (B*S-major) token order.
+    """
+    B, S, E = probs.shape
+    remaining = probs
+    dispatch = jnp.zeros((B, S, E, capacity), probs.dtype)
+    combine = jnp.zeros((B, S, E, capacity), probs.dtype)
+    fill = jnp.zeros((B, E), jnp.int32)          # tokens already queued
+    weight_sum = jnp.zeros((B, S), probs.dtype)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                 # (B,S)
+        gate = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
+        onehot = jax.nn.one_hot(idx, E, dtype=probs.dtype)   # (B,S,E)
+        pos = (jnp.cumsum(onehot, axis=1) - onehot
+               + fill[:, None, :].astype(probs.dtype))       # (B,S,E)
+        in_cap = pos < capacity
+        pos_i = pos.astype(jnp.int32)
+        slot = jax.nn.one_hot(pos_i, capacity, dtype=probs.dtype)
+        contrib = onehot[..., None] * slot * in_cap[..., None]
+        dispatch = dispatch + contrib
+        combine = combine + contrib * gate[..., None, None]
+        weight_sum = weight_sum + gate * (onehot * in_cap).sum(-1)
+        fill = fill + onehot.sum(axis=1).astype(jnp.int32)
+        remaining = remaining * (1.0 - onehot)
+    combine = combine / jnp.maximum(weight_sum[..., None, None], 1e-9)
+    return dispatch, combine
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    capacity = max(int(S * k / E * cfg.capacity_factor), 1)
+    dispatch, combine = _topk_dispatch(probs, k, capacity)
+    dispatch = constrain(dispatch.astype(x.dtype),
+                         "batch", None, "experts", None)
+    combine = combine.astype(x.dtype)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    xe = constrain(xe, "batch", "experts", None, None)
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", xe, p["wg"].astype(dt))
+        u = jnp.einsum("becd,edf->becf", xe, p["wu"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xe,
+                                   p["wu"].astype(dt)))
+    h = constrain(h, "batch", "experts", None, "act_mlp")
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"].astype(dt))
+    y = jnp.einsum("bsec,becd->bsd", combine, ye)
+    y = constrain(y, "batch", None, "act_embed")
+
+    # Switch load-balance loss: E * sum_e f_e * p_e (first-choice fractions)
+    first = jax.nn.one_hot(jnp.argmax(probs, -1), E, dtype=jnp.float32)
+    f_e = first.mean(axis=(0, 1))
+    p_e = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(f_e * p_e) * cfg.router_aux_coef
+    return y, aux

@@ -1,0 +1,28 @@
+"""scan-or-unroll helper for layer stacks.
+
+Default is ``lax.scan`` (HLO size O(1) in depth).  The dry-run sets
+``cfg.unroll_layers=True`` because XLA's HloCostAnalysis counts a while
+body once regardless of trip count -- unrolling makes cost_analysis()
+exact and lets XLA fuse across layer boundaries (which the roofline
+should see)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maybe_scan(f, init, xs, unroll: bool):
+    """Semantics of ``jax.lax.scan(f, init, xs)`` (ys may be None)."""
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    return carry, stacked

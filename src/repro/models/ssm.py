@@ -1,0 +1,195 @@
+"""Mamba2 (SSD) mixer -- the state-space block of zamba2.
+
+Chunked "state-space dual" algorithm (Dao & Gu, 2024) in pure jnp: within a
+chunk the output is an attention-like masked matmul (MXU-friendly; this is
+what the Pallas kernel in kernels/mamba2_scan accelerates), across chunks a
+short ``lax.scan`` carries the (H, P, N) state.  A single-token step
+function serves decode (constant state => long_500k-capable).
+
+Shapes: d_inner I = expand*D, heads H = I / ssm_head_dim, state N, one
+B/C group (Mamba2 default).  Conv width 4 over the (I + 2N) x/B/C channels.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .initlib import Builder, dense_init, ones_init, zeros_init
+
+# SSD chunk length: the intra-chunk decay tensor is (B, S/L, L, L, H) =
+# B*S*L*H elements, linear in L -- 64 keeps the 32k-prefill per-device
+# working set ~1 GB (the Pallas kernel tiles this away on TPU).
+CHUNK = 64
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray       # (B, H, P, N) recurrent state
+    conv: jnp.ndarray    # (B, convw-1, I+2N) conv tail
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    I = cfg.ssm_expand * cfg.d_model
+    H = I // cfg.ssm_head_dim
+    return I, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    I, H, P, N = dims(cfg)
+    D = cfg.d_model
+    conv_ch = I + 2 * N
+    b = Builder()
+    ks = jax.random.split(key, 6)
+    b.put("in_proj", dense_init(ks[0], (D, 2 * I + 2 * N + H),
+                                ("embed", "ssm_inner")))
+    b.put("conv_w", dense_init(ks[1], (cfg.ssm_conv, conv_ch),
+                               ("conv", "ssm_inner"), fan_in=cfg.ssm_conv))
+    b.put("conv_b", zeros_init((conv_ch,), ("ssm_inner",)))
+    # A_log init in [log 1 .. log 16] (mamba2 default A in -[1,16])
+    a0 = jnp.linspace(np.log(1.0), np.log(16.0), H)
+    b.put("A_log", (a0.astype(jnp.float32), ("ssm_heads",)))
+    b.put("dt_bias", (jnp.log(jnp.expm1(
+        jnp.clip(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                    1e-3, 1e-1), 1e-4, None))),
+        ("ssm_heads",)))
+    b.put("D", ones_init((H,), ("ssm_heads",)))
+    b.put("norm_scale", ones_init((I,), ("ssm_inner",)))
+    b.put("out_proj", dense_init(ks[3], (I, D), ("ssm_inner", "embed"),
+                                 fan_in=I))
+    return b.build()
+
+
+def _split_proj(cfg, zxbcdt):
+    I, H, P, N = dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [I, 2 * I + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, bias, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S.  xbc: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = tail if tail is not None else jnp.zeros(
+        (xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([pad.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, k:k + xbc.shape[1]] * w[k].astype(xbc.dtype)
+              for k in range(K))
+    new_tail = xp[:, -(K - 1):] if K > 1 else xp[:, :0]
+    return jax.nn.silu(out + bias.astype(xbc.dtype)), new_tail
+
+
+def _gated_norm(cfg, y, z, scale):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    return (yf * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                   state: Optional[SSMState] = None
+                   ) -> Tuple[jnp.ndarray, SSMState]:
+    """Full-sequence chunked SSD.  x: (B,S,D).  Returns (y, final_state)."""
+    B, S, D = x.shape
+    I, H, P, N = dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xbc, dtraw = _split_proj(cfg, zxbcdt)
+    tail0 = state.conv if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail0)
+    xi, Bc, Cc = jnp.split(xbc, [I, I + N], axis=-1)     # (B,S,I/N/N)
+    xh = xi.reshape(B, S, H, P)
+    xh = constrain(xh, "batch", None, "ssm_heads", None)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])      # (B,S,H)
+    A = -jnp.exp(p["A_log"])                              # (H,) negative
+    dA = dt * A[None, None]                               # log-decay per step
+
+    # pad to a chunk multiple
+    L = CHUNK if S >= CHUNK else S
+    pad = (-S) % L
+    if pad:
+        z_p = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, Bc, Cc = z_p(xh), z_p(Bc), z_p(Cc)
+        dt, dA = z_p(dt), z_p(dA)
+    nc = xh.shape[1] // L
+    xc = xh.reshape(B, nc, L, H, P)
+    Bcc = Bc.reshape(B, nc, L, N).astype(jnp.float32)
+    Ccc = Cc.reshape(B, nc, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, L, H)
+    dAc = dA.reshape(B, nc, L, H)
+    cum = jnp.cumsum(dAc, axis=2)                          # (B,nc,L,H)
+
+    # ---- intra-chunk (attention-like masked matmul) -----------------------
+    # M[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Ccc, Bcc)           # (B,nc,L,L)
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         scores, xc.astype(jnp.float32))
+
+    # ---- chunk states + inter-chunk scan ----------------------------------
+    # state contribution of chunk c: sum_j exp(cum_L - cum_j) dt_j B_j x_j
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    sB = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    (dtc * tail_decay), Bcc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1])                   # (B,nc,H)
+
+    h0 = (state.h.astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def chunk_step(h, inp):
+        s_c, dec_c = inp                                   # (B,H,N,P),(B,H)
+        h_next = h * dec_c[:, :, None, None] + s_c.transpose(0, 1, 3, 2)
+        return h_next, h                                   # emit state BEFORE
+
+    (h_final, h_prevs) = jax.lax.scan(
+        chunk_step, h0, (sB.transpose(1, 0, 2, 3, 4),
+                         chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Ccc, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, nc * L, H, P)
+    if pad:
+        y = y[:, :S]
+    y = y + xh[:, :S].astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, I).astype(dt_)
+    y = _gated_norm(cfg, y, z, p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    return (constrain(out, "batch", None, "act_embed"),
+            SSMState(h=h_final.astype(jnp.float32), conv=conv_tail))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    I, H, P, N = dims(cfg)
+    return SSMState(h=jnp.zeros((batch, H, P, N), jnp.float32),
+                    conv=jnp.zeros((batch, cfg.ssm_conv - 1, I + 2 * N),
+                                   jnp.dtype(cfg.dtype)))
+
+
+def mamba2_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: SSMState) -> Tuple[jnp.ndarray, SSMState]:
+    """Single-token recurrent step.  x: (B,1,D)."""
+    B = x.shape[0]
+    I, H, P, N = dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    z, xbc, dtraw = _split_proj(cfg, zxbcdt)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xi, Bc, Cc = jnp.split(xbc, [I, I + N], axis=-1)
+    xh = xi.reshape(B, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None])             # (B,H)
+    dec = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None])       # (B,H)
+    Bv = Bc[:, 0].astype(jnp.float32)                      # (B,N)
+    Cv = Cc[:, 0].astype(jnp.float32)
+    h = (state.h * dec[:, :, None, None]
+         + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bv))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, I).astype(dt_)
+    y = _gated_norm(cfg, y, z, p["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    return out, SSMState(h=h, conv=conv_tail)

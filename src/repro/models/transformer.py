@@ -1,0 +1,170 @@
+"""Decoder-only transformer covering the dense, moe and vlm families.
+
+Layer stack is a single ``lax.scan`` over stacked per-layer parameters
+(keeps HLO size O(1) in depth -- essential for the 56-layer mixtral
+dry-run) with a per-config activation-checkpoint policy.  MoE layers swap
+the MLP for the capacity-based expert layer; the vlm family adds M-RoPE
+positions and (stub-frontend) patch embeddings scattered into the prefix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import layers as L
+from . import moe as moe_lib
+from .config import ModelConfig
+from .initlib import Builder, stack_layer_inits
+from .scanning import maybe_scan
+
+
+def remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def init_layer(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 4)
+    b.sub("ln1", L.init_norm(cfg))
+    b.sub("attn", L.init_attention(ks[0], cfg))
+    b.sub("ln2", L.init_norm(cfg))
+    if cfg.family == "moe":
+        b.sub("mlp", moe_lib.init_moe(ks[1], cfg))
+    else:
+        b.sub("mlp", L.init_mlp(ks[1], cfg))
+    return b.build()
+
+
+def init_params(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 3)
+    b.sub("embed", L.init_embedding(ks[0], cfg))
+    b.sub("layers", stack_layer_inits(init_layer, ks[1], cfg.n_layers, cfg))
+    b.sub("ln_f", L.init_norm(cfg))
+    return b.build()
+
+
+def _layer_train(pl, cfg: ModelConfig, x, positions):
+    h, _ = L.attention_forward(pl["attn"], cfg,
+                               L.apply_norm(pl["ln1"], cfg, x),
+                               positions=positions, causal=True,
+                               window=cfg.window)
+    x = x + h
+    z = L.apply_norm(pl["ln2"], cfg, x)
+    if cfg.family == "moe":
+        y, aux = moe_lib.apply_moe(pl["mlp"], cfg, z)
+    else:
+        y, aux = L.apply_mlp(pl["mlp"], cfg, z), jnp.float32(0.0)
+    return x + y, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None,
+            patch_embeds=None):
+    """Training/scoring forward: (B,S) tokens -> (B,S,Vpad) logits, aux."""
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if patch_embeds is not None:            # vlm stub frontend
+        n = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, n:]], 1)
+    if positions is None:
+        B, S = tokens.shape
+        pos1 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                (B, S))
+        positions = (jnp.repeat(pos1[..., None], 3, -1) if cfg.mrope
+                     else pos1)
+
+    body = remat_wrap(
+        functools.partial(_layer_train, cfg=cfg, positions=positions),
+        cfg)
+
+    def scan_fn(carry, pl):
+        x, aux = carry
+        x, a = body(pl, x=x)
+        return (x, aux + a), None
+
+    (x, aux), _ = maybe_scan(scan_fn, (x, jnp.float32(0.0)),
+                             params["layers"], cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    return L.logits_from_hidden(params["embed"], cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class DecoderCaches(NamedTuple):
+    kv: L.KVCache          # stacked (L, ...) leaves
+
+
+def init_caches(cfg: ModelConfig, batch: int, context: int,
+                dtype=None) -> DecoderCaches:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = L.init_kv_cache(cfg, batch, context, dtype)
+    kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+    return DecoderCaches(kv=L.KVCache(*kv))
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, context: int,
+            positions=None, patch_embeds=None):
+    """Run the prompt, return (last-position logits, caches)."""
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    if patch_embeds is not None:
+        n = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, n:]], 1)
+    B, S = tokens.shape
+    if positions is None:
+        pos1 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                (B, S))
+        positions = (jnp.repeat(pos1[..., None], 3, -1) if cfg.mrope
+                     else pos1)
+
+    def one_layer(x, pl):
+        h, (k, v) = L.attention_forward(
+            pl["attn"], cfg, L.apply_norm(pl["ln1"], cfg, x),
+            positions=positions, causal=True, window=cfg.window)
+        x = x + h
+        z = L.apply_norm(pl["ln2"], cfg, x)
+        if cfg.family == "moe":
+            y, _ = moe_lib.apply_moe(pl["mlp"], cfg, z)
+        else:
+            y = L.apply_mlp(pl["mlp"], cfg, z)
+        cache = L.cache_from_prefill(cfg, k, v, context)
+        return x + y, cache
+
+    x, kv = maybe_scan(one_layer, x, params["layers"], cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x[:, -1:])
+    logits = L.logits_from_hidden(params["embed"], cfg, x)
+    return logits, DecoderCaches(kv=kv)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches: DecoderCaches,
+                index):
+    """One token for the whole batch.  tokens: (B, 1); index: () int32."""
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    def one_layer(x, inp):
+        pl, cache = inp
+        h, new_cache = L.attention_decode(
+            pl["attn"], cfg, L.apply_norm(pl["ln1"], cfg, x), cache, index)
+        x = x + h
+        z = L.apply_norm(pl["ln2"], cfg, x)
+        if cfg.family == "moe":
+            y, _ = moe_lib.apply_moe(pl["mlp"], cfg, z)
+        else:
+            y = L.apply_mlp(pl["mlp"], cfg, z)
+        return x + y, new_cache
+
+    x, kv = maybe_scan(one_layer, x, (params["layers"], caches.kv),
+                       cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    logits = L.logits_from_hidden(params["embed"], cfg, x)
+    return logits, DecoderCaches(kv=kv)

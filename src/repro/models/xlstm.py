@@ -1,0 +1,196 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to Beck et al. 2024 in structure -- exponential gating with the
+max-stabilizer, matrix-memory update C_t = f C_{t-1} + i (v k^T), scalar
+sLSTM with recurrent gate connections -- with the block plumbing reduced
+to what xlstm-350m needs (d_ff = 0: gating/up-down projections live inside
+the cells; no separate FFN).  Both cells expose a fused full-sequence scan
+(training/prefill) and a single-step form (decode); recurrent state is
+O(1) in sequence length, which is what makes the long_500k cell lowerable.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import constrain
+from .config import ModelConfig
+from .initlib import Builder, dense_init, ones_init, zeros_init
+
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray    # (B, H, dk, dv) matrix memory
+    n: jnp.ndarray    # (B, H, dk) normalizer
+    m: jnp.ndarray    # (B, H) stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, D) cell
+    n: jnp.ndarray    # (B, D) normalizer
+    m: jnp.ndarray    # (B, D) stabilizer
+    h: jnp.ndarray    # (B, D) hidden (recurrent input)
+
+
+def _hd(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H, hd = _hd(cfg)
+    b = Builder()
+    ks = jax.random.split(key, 6)
+    b.put("wq", dense_init(ks[0], (D, H, hd), ("embed", "heads", None)))
+    b.put("wk", dense_init(ks[1], (D, H, hd), ("embed", "heads", None)))
+    b.put("wv", dense_init(ks[2], (D, H, hd), ("embed", "heads", None)))
+    b.put("wif", dense_init(ks[3], (D, H, 2), ("embed", "heads", None)))
+    b.put("bif", (jnp.tile(jnp.asarray([[0.0, 3.0]], jnp.float32), (H, 1)),
+                  ("heads", None)))        # forget-gate bias ~ +3
+    b.put("wo", dense_init(ks[4], (D, D), ("embed", "embed_tp")))
+    b.put("wout", dense_init(ks[5], (D, D), ("embed_tp", "embed")))
+    return b.build()
+
+
+def _mlstm_gates(p, x):
+    g = jnp.einsum("bsd,dhg->bshg", x.astype(jnp.float32),
+                   p["wif"].astype(jnp.float32)) + p["bif"][None, None]
+    logi, logf_raw = g[..., 0], g[..., 1]
+    logf = -jax.nn.softplus(-logf_raw)      # log sigmoid: f in (0,1)
+    return logi, logf
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    H, hd = _hd(cfg)
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32),
+                      m=jnp.full((batch, H), -1e9, jnp.float32))
+
+
+def _mlstm_step(qkv_scale, carry: MLSTMState, inp):
+    q, k, v, logi, logf = inp        # (B,H,hd) x3, (B,H) x2
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    C, n, m = carry
+    m_new = jnp.maximum(logf + m, logi)
+    i_s = jnp.exp(logi - m_new)[..., None]
+    f_s = jnp.exp(logf + m - m_new)[..., None]
+    C = f_s[..., None] * C + i_s[..., None] * (k[..., :, None]
+                                               * v[..., None, :])
+    n = f_s * n + i_s * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Optional[MLSTMState] = None
+                  ) -> Tuple[jnp.ndarray, MLSTMState]:
+    """x: (B,S,D) -> (y, state).  lax.scan over time."""
+    B, S, D = x.shape
+    H, hd = _hd(cfg)
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(hd)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt)) * scale
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt)) / np.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    logi, logf = _mlstm_gates(p, x)
+    st0 = state if state is not None else init_mlstm_state(cfg, B)
+    # keep the recurrent carry batch-sharded: an unconstrained zeros init
+    # would force GSPMD to replicate the whole scan (observed as
+    # full-global-batch all-gathers around the time scan; §Perf xlstm)
+    st0 = MLSTMState(*(constrain(l, "batch", *([None] * (l.ndim - 1)))
+                       for l in st0))
+    # gates stay f32 (exponential stabilizer); q/k/v may ride in the
+    # working dtype (cfg.bf16_elementwise) -- halves the scan-input
+    # resharding traffic (xlstm §Perf iteration 2)
+    qkv_dt = dt if cfg.bf16_elementwise else jnp.float32
+    xs = (q.transpose(1, 0, 2, 3).astype(qkv_dt),
+          k.transpose(1, 0, 2, 3).astype(qkv_dt),
+          v.transpose(1, 0, 2, 3).astype(qkv_dt),
+          logi.transpose(1, 0, 2), logf.transpose(1, 0, 2))
+    xs = tuple(constrain(a, None, "batch", *([None] * (a.ndim - 2)))
+               for a in xs)
+    st, hs = jax.lax.scan(lambda c, i: _mlstm_step(scale, c, i), st0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(dt)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo"].astype(dt)))
+    y = jnp.einsum("bsd,de->bse", o * h, p["wout"].astype(dt))
+    return constrain(y, "batch", None, "act_embed"), st
+
+
+def mlstm_decode(p, cfg, x, state):
+    y, st = mlstm_forward(p, cfg, x, state)
+    return y, st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    D = cfg.d_model
+    b = Builder()
+    ks = jax.random.split(key, 4)
+    # input and recurrent weights for (z, i, f, o) stacked
+    b.put("wx", dense_init(ks[0], (D, 4 * D), ("embed", "embed_tp")))
+    b.put("wh", dense_init(ks[1], (D, 4 * D), ("embed", "embed_tp")))
+    bias = np.zeros((4 * D,), np.float32)
+    bias[2 * D:3 * D] = 3.0                  # forget-gate bias
+    b.put("b", (jnp.asarray(bias), ("embed_tp",)))
+    b.put("wout", dense_init(ks[2], (D, D), ("embed_tp", "embed")))
+    return b.build()
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, D), -1e9, jnp.float32),
+                      h=z)
+
+
+def _slstm_step(p, carry: SLSTMState, xt):
+    """xt: (B, D) f32; recurrent connections h_{t-1} -> gates."""
+    D = xt.shape[-1]
+    pre = (xt @ p["wx"].astype(jnp.float32)
+           + carry.h @ p["wh"].astype(jnp.float32)
+           + p["b"][None])
+    z, gi, gf, go = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    logi = gi
+    logf = -jax.nn.softplus(-gf)
+    m_new = jnp.maximum(logf + carry.m, logi)
+    i_s = jnp.exp(logi - m_new)
+    f_s = jnp.exp(logf + carry.m - m_new)
+    c = f_s * carry.c + i_s * z
+    n = f_s * carry.n + i_s
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, m_new, h), h
+
+
+def slstm_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Optional[SLSTMState] = None
+                  ) -> Tuple[jnp.ndarray, SLSTMState]:
+    B, S, D = x.shape
+    dt = x.dtype
+    st0 = state if state is not None else init_slstm_state(cfg, B)
+    st0 = SLSTMState(*(constrain(l, "batch", None) for l in st0))
+    xs = constrain(x.transpose(1, 0, 2).astype(jnp.float32),
+                   None, "batch", None)
+    st, hs = jax.lax.scan(lambda c, i: _slstm_step(p, c, i), st0, xs)
+    h = hs.transpose(1, 0, 2).astype(dt)
+    y = jnp.einsum("bsd,de->bse", h, p["wout"].astype(dt))
+    return constrain(y, "batch", None, "act_embed"), st
+
+
+def slstm_decode(p, cfg, x, state):
+    return slstm_forward(p, cfg, x, state)

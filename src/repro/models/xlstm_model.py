@@ -1,0 +1,107 @@
+"""xlstm-350m top level: alternating mLSTM / sLSTM blocks.
+
+24 blocks = 12 scanned (mLSTM, sLSTM) pairs with pre-norm residuals;
+d_ff = 0 per the assignment (no separate FFN -- projections and gating
+live inside the cells, as in the xLSTM paper's block design).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import xlstm as X
+from .config import ModelConfig
+from .initlib import Builder, stack_layer_inits
+from .scanning import maybe_scan
+from .transformer import remat_wrap
+
+
+def _pairs(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % 2 == 0
+    return cfg.n_layers // 2
+
+
+def init_pair(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 2)
+    b.sub("ln_m", L.init_norm(cfg))
+    b.sub("mlstm", X.init_mlstm(ks[0], cfg))
+    b.sub("ln_s", L.init_norm(cfg))
+    b.sub("slstm", X.init_slstm(ks[1], cfg))
+    return b.build()
+
+
+def init_params(key, cfg: ModelConfig):
+    b = Builder()
+    ks = jax.random.split(key, 2)
+    b.sub("embed", L.init_embedding(ks[0], cfg))
+    b.sub("pairs", stack_layer_inits(init_pair, ks[1], _pairs(cfg), cfg))
+    b.sub("ln_f", L.init_norm(cfg))
+    return b.build()
+
+
+def _pair_fwd(pl, cfg, x, mstate=None, sstate=None):
+    y, ms = X.mlstm_forward(pl["mlstm"], cfg,
+                            L.apply_norm(pl["ln_m"], cfg, x), mstate)
+    x = x + y
+    y, ss = X.slstm_forward(pl["slstm"], cfg,
+                            L.apply_norm(pl["ln_s"], cfg, x), sstate)
+    return x + y, ms, ss
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None):
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+    body = remat_wrap(lambda pl, x: _pair_fwd(pl, cfg, x)[0], cfg)
+    x, _ = maybe_scan(lambda x, pl: (body(pl, x), None), x,
+                      params["pairs"], cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    return L.logits_from_hidden(params["embed"], cfg, x), jnp.float32(0.0)
+
+
+class XLSTMCaches(NamedTuple):
+    m: X.MLSTMState        # stacked (pairs, ...)
+    s: X.SLSTMState
+
+
+def init_caches(cfg: ModelConfig, batch: int, context: int,
+                dtype=None) -> XLSTMCaches:
+    n = _pairs(cfg)
+    m1 = X.init_mlstm_state(cfg, batch)
+    s1 = X.init_slstm_state(cfg, batch)
+    m = X.MLSTMState(*jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), m1))
+    s = X.SLSTMState(*jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), s1))
+    return XLSTMCaches(m=m, s=s)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, context: int):
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    def one(x, pl):
+        x, ms, ss = _pair_fwd(pl, cfg, x)
+        return x, (ms, ss)
+
+    x, (m, s) = maybe_scan(one, x, params["pairs"], cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x[:, -1:])
+    return (L.logits_from_hidden(params["embed"], cfg, x),
+            XLSTMCaches(m=m, s=s))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches: XLSTMCaches,
+                index):
+    x = L.embed_tokens(params["embed"], cfg, tokens)
+
+    def one(x, inp):
+        pl, ms, ss = inp
+        x, ms2, ss2 = _pair_fwd(pl, cfg, x, ms, ss)
+        return x, (ms2, ss2)
+
+    x, (m, s) = maybe_scan(one, x, (params["pairs"], caches.m, caches.s),
+                           cfg.unroll_layers)
+    x = L.apply_norm(params["ln_f"], cfg, x)
+    return (L.logits_from_hidden(params["embed"], cfg, x),
+            XLSTMCaches(m=m, s=s))

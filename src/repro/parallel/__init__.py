@@ -1,0 +1,4 @@
+"""Distribution substrate: logical-axis sharding rules, pipeline stage
+parallelism, and collective helpers."""
+from .sharding import (ShardingRules, DEFAULT_RULES, logical_to_spec,
+                       spec_tree, constrain, set_rules, current_rules)

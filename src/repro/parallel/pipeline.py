@@ -1,0 +1,82 @@
+"""GPipe-style pipeline parallelism with shard_map + lax.ppermute.
+
+The mesh gains a "stage" axis; layers are split into S contiguous stages
+(parameters stacked per stage).  Microbatches flow through the classic
+GPipe schedule: tick t runs microbatch (t - s) on stage s, activations
+hop stage->stage+1 over ICI via ppermute.  Bubble fraction is
+(S-1)/(M+S-1), so M >= 4S keeps it under ~20%.
+
+This is the optional multi-pod layout where the "pod" axis becomes the
+pipeline axis (inter-pod DCI links carry only per-tick activations
+instead of gradient all-reduces -- the right trade when DCI bandwidth
+<< ICI).  The production dry-run default remains DP x TP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(stage_fn: Callable, mesh: Mesh, *, axis: str = "stage",
+                   n_microbatches: int):
+    """Build ``run(stage_params, x) -> y``.
+
+    stage_fn(params_slice, x_mb) -> y_mb: applies one stage's layers to one
+    microbatch (same activation shape in/out -- a transformer trunk).
+
+    stage_params: pytree with leading dim S (one slice per stage).
+    x: (M, mb, ...) microbatched inputs (valid data fed at stage 0).
+    Returns y: (M, mb, ...) outputs collected at the last stage and
+    broadcast back to all stages (so downstream code is stage-agnostic).
+    """
+    S = mesh.shape[axis]
+    M = n_microbatches
+    fwd = [(i, (i + 1) % S) for i in range(S)]
+
+    def per_stage(params_s, xs):
+        # params_s: (1, ...) slice for this stage; xs: (M, mb, ...) on
+        # every stage (only stage 0's copy is semantically live input).
+        params_s = jax.tree.map(lambda a: a[0], params_s)
+        stage = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        buf = jnp.zeros(mb_shape, xs.dtype)          # incoming activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            m_in = jnp.clip(t, 0, M - 1)
+            x_in = jnp.where(stage == 0, xs[m_in], buf)
+            y = stage_fn(params_s, x_in)
+            nxt = jax.lax.ppermute(y, axis, fwd)
+            out_m = t - (S - 1)
+            valid = (stage == S - 1) & (out_m >= 0) & (out_m < M)
+            slot = jnp.clip(out_m, 0, M - 1)
+            outs = outs.at[slot].set(
+                jnp.where(valid, y, outs[slot]))
+            return (nxt, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs),
+                                      jnp.arange(M + S - 1))
+        # broadcast the collected outputs from the last stage to everyone
+        # (only stage S-1 ever writes `outs`, so a psum is a broadcast)
+        outs = jax.lax.psum(outs, axis) if S > 1 else outs
+        return outs
+
+    pspec = P(axis)
+    return shard_map(per_stage, mesh=mesh,
+                     in_specs=(pspec, P()), out_specs=P(),
+                     check_rep=False)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """(L, ...) stacked layer params -> (S, L/S, ...) stage-major."""
+    def resh(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return a.reshape((n_stages, L // n_stages) + a.shape[1:])
+    return jax.tree.map(resh, stacked_params)

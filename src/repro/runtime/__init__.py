@@ -1,0 +1,3 @@
+from .elastic import ElasticPlan, plan_downscale
+from .heartbeat import FailureDetector, HeartbeatBus
+from .straggler import StragglerDetector, StragglerPolicy

@@ -1,0 +1,104 @@
+"""AdamW + LR schedules, from scratch (no optax in this container).
+
+Optimizer state mirrors parameter sharding (each moment inherits the
+parameter's logical axes), so under FSDP the optimizer adds 2x sharded
+bytes -- the ZeRO-3 layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"       # cosine | linear | constant
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray      # () int32
+    mu: Any                # first moments  (pytree like params)
+    nu: Any                # second moments
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    if cfg.schedule == "constant":
+        decay = jnp.float32(1.0)
+    else:
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        else:
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * (1 - t)
+    return cfg.lr * jnp.minimum(warm, 1.0) * decay
+
+
+def adamw_init(params) -> OptState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=z,
+                    nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def _decay_mask(params):
+    """No weight decay on vectors (norm scales, biases): ndim < 2."""
+    return jax.tree.map(lambda p: jnp.float32(p.ndim >= 2), params)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(p, g, m, v, wd):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * wd * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m2.astype(m.dtype), v2.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu, mask)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,96 @@
+"""The jitted training step: loss -> grads -> (optional compression) ->
+AdamW, with optional microbatch gradient accumulation.
+
+``make_train_step(model, opt_cfg, ...)`` returns a pure function
+``step(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from parallel.sharding (the dry-run lowers exactly this
+function for the train_4k cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from . import compression as comp
+from .optim import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef: Optional[comp.EFState]     # error-feedback (None = off)
+
+
+def train_state_init(model: Model, key, opt_cfg: AdamWConfig,
+                     compress: bool = False) -> Tuple[TrainState, Any]:
+    params, axes = model.init(key)
+    state = TrainState(params=params, opt=adamw_init(params),
+                       ef=comp.ef_init(params) if compress else None)
+    return state, axes
+
+
+def state_axes(param_axes, compress: bool = False):
+    """Logical axes for the full TrainState (moments mirror params)."""
+    ef = comp.EFState(residual=param_axes) if compress else None
+    return TrainState(params=param_axes,
+                      opt=OptState(step=(), mu=param_axes, nu=param_axes),
+                      ef=ef)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    microbatch: Optional[int] = None,
+                    compress_grads: bool = False
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState,
+                                                            Dict]]:
+    """microbatch: number of accumulation slices along the batch dim (the
+    per-slice batch is global_batch // microbatch)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accumulate(params, batch):
+        if not microbatch or microbatch <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        B = batch["tokens"].shape[0]
+        assert B % microbatch == 0, (B, microbatch)
+        mb = B // microbatch
+        sliced = jax.tree.map(
+            lambda x: x.reshape((microbatch, mb) + x.shape[1:]), batch)
+
+        def body(carry, mb_batch):
+            grads_acc, metrics_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb_batch)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            metrics_acc = jax.tree.map(jnp.add, metrics_acc, metrics)
+            return (grads_acc, metrics_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+        zero_m = {k: jnp.zeros((), jnp.float32) for k in
+                  ("loss", "nll", "z_loss", "aux", "ppl_proxy")}
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), sliced)
+        inv = 1.0 / microbatch
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+        return grads, metrics
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grads, metrics = accumulate(state.params, batch)
+        ef = state.ef
+        if compress_grads and ef is not None:
+            grads, ef = comp.ef_compress_grads(grads, ef)
+        params, opt, opt_metrics = adamw_update(opt_cfg, state.params,
+                                                grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return TrainState(params=params, opt=opt, ef=ef), metrics
+
+    return step

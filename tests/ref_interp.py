@@ -1,0 +1,118 @@
+"""Pure-Python reference interpreter of the CGRA ISA.
+
+An independent implementation of the semantics in ``repro.core.isa`` /
+``repro.core.cgra`` (shared PC, lockstep, torus neighbours, ROUT
+write-through, ascending-PE store arbitration, lowest-PE branch tie-break).
+Used by hypothesis differential tests: random programs must produce
+identical architectural state on this interpreter and the JAX simulator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import isa
+
+_M32 = (1 << 32) - 1
+
+
+def _wrap(x: int) -> int:
+    x &= _M32
+    return x - (1 << 32) if x >= (1 << 31) else x
+
+
+def _u32(x: int) -> int:
+    return x & _M32
+
+
+def run_reference(program, mem_init, max_steps: int = 4096, rows: int = 4,
+                  cols: int = 4):
+    """Interpret `program`; returns (regs (P,4), rout (P,), mem, pc, steps)."""
+    P = program.n_pes
+    nbr = isa.neighbour_index_maps(rows, cols)
+    regs = [[0] * 4 for _ in range(P)]
+    rout = [0] * P
+    mem = [int(v) for v in np.asarray(mem_init, np.int64)]
+    M = len(mem)
+    pc = 0
+    steps = 0
+
+    def read(p: int, src: int, imm: int) -> int:
+        name = isa.SOURCES[src]
+        if name == "ZERO":
+            return 0
+        if name == "IMM":
+            return imm
+        if name in ("R0", "R1", "R2", "R3"):
+            return regs[p][int(name[1])]
+        if name == "ROUT":
+            return rout[p]
+        return rout[int(nbr[name][p])]
+
+    for _ in range(max_steps):
+        steps += 1
+        ops = program.ops[pc]
+        # operand fetch: all sampled before any write
+        a = [read(p, int(program.srcA[pc, p]), int(program.imm[pc, p]))
+             for p in range(P)]
+        b = [read(p, int(program.srcB[pc, p]), int(program.imm[pc, p]))
+             for p in range(P)]
+        new_rout = list(rout)
+        stores = []  # (p, addr, val) in PE order
+        taken_target = None
+        exited = False
+        for p in range(P):
+            op = isa.OPCODES[int(ops[p])]
+            imm = int(program.imm[pc, p])
+            ap, bp = a[p], b[p]
+            res = None
+            if op == "EXIT":
+                exited = True
+            elif op == "SADD":
+                res = _wrap(ap + bp)
+            elif op == "SSUB":
+                res = _wrap(ap - bp)
+            elif op == "SMUL":
+                res = _wrap(ap * bp)
+            elif op == "SLL":
+                res = _wrap(_u32(ap) << (bp & 31))
+            elif op == "SRL":
+                res = _wrap(_u32(ap) >> (bp & 31))
+            elif op == "SRA":
+                res = _wrap(ap >> (bp & 31))
+            elif op == "LAND":
+                res = _wrap(ap & bp)
+            elif op == "LOR":
+                res = _wrap(ap | bp)
+            elif op == "LXOR":
+                res = _wrap(ap ^ bp)
+            elif op == "SLT":
+                res = 1 if ap < bp else 0
+            elif op == "MV":
+                res = ap
+            elif op in ("BEQ", "BNE", "BLT", "BGE", "JUMP"):
+                cond = {"BEQ": ap == bp, "BNE": ap != bp, "BLT": ap < bp,
+                        "BGE": ap >= bp, "JUMP": True}[op]
+                if cond and taken_target is None:  # lowest PE wins
+                    taken_target = imm
+            elif op == "LWD":
+                res = mem[imm % M]
+            elif op == "LWI":
+                res = mem[ap % M]
+            elif op == "SWD":
+                stores.append((p, imm % M, ap))
+            elif op == "SWI":
+                stores.append((p, ap % M, bp))
+            if res is not None:
+                new_rout[p] = res
+                d = isa.DESTS[int(program.dest[pc, p])]
+                if d != "ROUT":
+                    regs[p][int(d[1])] = res
+        for _, addr, val in stores:  # ascending PE order: last write wins
+            mem[addr] = val
+        rout = new_rout
+        if exited:
+            break
+        pc = taken_target if taken_target is not None else pc + 1
+        pc = min(max(pc, 0), program.n_instrs - 1)
+    return (np.array(regs, np.int64), np.array(rout, np.int64),
+            np.array(mem, np.int64), pc, steps)

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+/ train-loss / prefill / decode step on CPU; output shapes + finiteness.
+The FULL configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import make_model
+
+B, S = 2, 16
+
+
+def _batch(model, key):
+    cfg = model.cfg
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_patches, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                               (B, S))
+        batch["positions"] = jnp.repeat(pos[..., None], 3, -1)
+    return batch
+
+
+@pytest.fixture(scope="module", params=list_archs())
+def arch_setup(request):
+    cfg = get_smoke_config(request.param)
+    model = make_model(cfg)
+    params, axes = model.init(jax.random.key(0))
+    return request.param, model, params, axes
+
+
+def test_train_loss_finite(arch_setup):
+    name, model, params, _ = arch_setup
+    batch = _batch(model, jax.random.key(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+    # a random model must start near ln(V) cross-entropy
+    assert abs(float(metrics["nll"]) - np.log(model.cfg.vocab)) < 2.0, (
+        name, float(metrics["nll"]), np.log(model.cfg.vocab))
+
+
+def test_grads_exist_and_finite(arch_setup):
+    name, model, params, _ = arch_setup
+    batch = _batch(model, jax.random.key(2))
+    g = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    leaves = jax.tree.leaves(g)
+    assert leaves, name
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves), name
+    # at least 90% of parameter tensors receive a nonzero gradient
+    nz = [float(np.abs(np.asarray(l)).max()) > 0 for l in leaves]
+    assert np.mean(nz) > 0.9, (name, np.mean(nz))
+
+
+def test_prefill_then_decode_matches_forward(arch_setup):
+    """Prefill(S tokens) + decode(token S) must equal the teacher-forced
+    forward logits at position S -- the strongest cache-correctness check.
+    """
+    name, model, params, _ = arch_setup
+    cfg = model.cfg
+    batch = _batch(model, jax.random.key(3))
+    tokens = batch["tokens"]
+    ctx = S + 4
+    logits_pre, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, context=ctx))(params, batch)
+    assert logits_pre.shape == (B, 1, cfg.vocab_padded), name
+    assert np.isfinite(np.asarray(logits_pre)).all(), name
+    # teacher-forced forward over S+1 tokens
+    nxt = jax.random.randint(jax.random.key(4), (B, 1), 0, cfg.vocab)
+    logits_dec, caches2 = jax.jit(model.decode)(
+        params, nxt, caches, jnp.asarray(S, jnp.int32))
+    assert logits_dec.shape == (B, 1, cfg.vocab_padded), name
+    assert np.isfinite(np.asarray(logits_dec)).all(), name
+
+    full = dict(batch)
+    full["tokens"] = jnp.concatenate([tokens, nxt], axis=1)
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S + 1, dtype=jnp.int32)[None],
+                               (B, S + 1))
+        full["positions"] = jnp.repeat(pos[..., None], 3, -1)
+
+    def fwd(p, b):
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            return encdec.forward(p, cfg, b["tokens"], b["frames"])[0]
+        if cfg.family == "vlm":
+            from repro.models import transformer as tfm
+            return tfm.forward(p, cfg, b["tokens"],
+                               positions=b.get("positions"),
+                               patch_embeds=b.get("patch_embeds"))[0]
+        return model.mod.forward(p, cfg, b["tokens"])[0]
+
+    ref = np.asarray(jax.jit(fwd)(params, full))
+    got_pre = np.asarray(logits_pre)[:, 0, :cfg.vocab]
+    want_pre = ref[:, S - 1, :cfg.vocab]
+    np.testing.assert_allclose(got_pre, want_pre, rtol=2e-3, atol=2e-3,
+                               err_msg=f"{name}: prefill != forward")
+    got_dec = np.asarray(logits_dec)[:, 0, :cfg.vocab]
+    want_dec = ref[:, S, :cfg.vocab]
+    np.testing.assert_allclose(got_dec, want_dec, rtol=2e-3, atol=2e-3,
+                               err_msg=f"{name}: decode != forward")
+
+
+def test_param_axes_cover_every_leaf(arch_setup):
+    """Every parameter leaf carries logical-axis metadata of equal rank."""
+    name, model, params, axes = arch_setup
+    pl = jax.tree.leaves(params)
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    al = jax.tree.leaves(axes, is_leaf=is_ax)
+    assert len(pl) == len(al), name
+    for p, a in zip(pl, al):
+        assert isinstance(a, tuple) and len(a) == p.ndim, (name, a, p.shape)
+
+
+def test_input_specs_lowerable_on_cpu(arch_setup):
+    """input_specs() must be jit-lowerable for every applicable shape at
+    smoke scale (the production-mesh version is launch/dryrun.py)."""
+    from repro.models.config import ShapeConfig, shape_applicable
+    name, model, params, _ = arch_setup
+    shp = ShapeConfig("smoke_train", 16, 2, "train")
+    specs, _ = model.input_specs(shp)
+    lowered = jax.jit(lambda p, b: model.loss(p, b)[0]).lower(params, specs)
+    assert lowered is not None
+
+    shp_d = ShapeConfig("smoke_decode", 16, 2, "decode")
+    specs_d, _ = model.input_specs(shp_d)
+    lowered_d = jax.jit(model.decode).lower(
+        params, specs_d["tokens"], specs_d["caches"], specs_d["index"])
+    assert lowered_d is not None

@@ -1,0 +1,104 @@
+"""Attention edge paths: q-block chunking, SWA ring cache, M-RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+
+
+def _cfg(**kw):
+    return get_smoke_config("llama3.2-1b").replace(**kw)
+
+
+def _x(key, cfg, B, S):
+    return jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+
+
+def test_qblock_chunking_matches_unchunked(monkeypatch):
+    """The prefill q-block path must equal single-shot attention."""
+    monkeypatch.setattr(L, "QBLOCK_THRESHOLD", 32)
+    monkeypatch.setattr(L, "QBLOCK", 32)
+    cfg = _cfg()
+    p, _ = L.init_attention(jax.random.key(0), cfg)
+    x = _x(jax.random.key(1), cfg, 2, 128)     # 128 > 32 -> 4 blocks
+    y_blk, _ = L.attention_forward(p, cfg, x, causal=True)
+    monkeypatch.setattr(L, "QBLOCK_THRESHOLD", 10**9)
+    y_ref, _ = L.attention_forward(p, cfg, x, causal=True)
+    np.testing.assert_allclose(np.asarray(y_blk), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_qblock_with_sliding_window(monkeypatch):
+    monkeypatch.setattr(L, "QBLOCK_THRESHOLD", 32)
+    monkeypatch.setattr(L, "QBLOCK", 32)
+    cfg = _cfg(window=48)
+    p, _ = L.init_attention(jax.random.key(0), cfg)
+    x = _x(jax.random.key(1), cfg, 1, 128)
+    y_blk, _ = L.attention_forward(p, cfg, x, causal=True,
+                                   window=cfg.window)
+    monkeypatch.setattr(L, "QBLOCK_THRESHOLD", 10**9)
+    y_ref, _ = L.attention_forward(p, cfg, x, causal=True,
+                                   window=cfg.window)
+    np.testing.assert_allclose(np.asarray(y_blk), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_swa_ring_cache_decode_matches_full_history():
+    """Decode beyond the window with the ring cache == full attention
+    restricted to the window (starcoder2/mixtral long-context property)."""
+    cfg = _cfg(window=8)
+    p, _ = L.init_attention(jax.random.key(0), cfg)
+    B, S = 1, 24
+    x = _x(jax.random.key(1), cfg, B, S)
+    # reference: full-sequence SWA
+    y_ref, _ = L.attention_forward(p, cfg, x, causal=True,
+                                   window=cfg.window)
+    # decode token-by-token through the ring cache (C = window = 8)
+    cache = L.init_kv_cache(cfg, B, S, jnp.float32)
+    assert cache.k.shape[1] == cfg.window     # bounded!
+    outs = []
+    for t in range(S):
+        y_t, cache = L.attention_decode(p, cfg, x[:, t:t + 1], cache,
+                                        jnp.asarray(t, jnp.int32))
+        outs.append(y_t)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """Identical position triplets == plain 1-D RoPE (qwen2-vl text)."""
+    hd = 64
+    pos1 = jnp.arange(16, dtype=jnp.int32)[None]
+    pos3 = jnp.repeat(pos1[..., None], 3, -1)
+    c1, s1 = L.rope_cos_sin(pos1, hd, 1e4)
+    c3, s3 = L.rope_cos_sin(pos3, hd, 1e4, mrope_sections=(8, 12, 12))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c3), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s3), rtol=1e-6)
+
+
+def test_mrope_sections_use_their_position_component():
+    hd = 64
+    B, S = 1, 4
+    pos3 = jnp.zeros((B, S, 3), jnp.int32)
+    pos3 = pos3.at[..., 1].set(7)        # only the "height" component
+    c, s = L.rope_cos_sin(pos3, hd, 1e4, mrope_sections=(8, 12, 12))
+    c = np.asarray(c)[0, 0, 0]
+    # temporal section (first 8 freq slots): position 0 -> cos = 1
+    np.testing.assert_allclose(c[:8], 1.0, rtol=1e-6)
+    # height section: position 7 -> cos != 1 somewhere
+    assert np.abs(c[8:20] - 1.0).max() > 1e-3
+
+
+def test_bf16_elementwise_matches_f32_norm_closely():
+    cfg = _cfg(dtype="bfloat16")
+    p, _ = L.init_norm(cfg)
+    x = (jax.random.normal(jax.random.key(2), (2, 8, cfg.d_model))
+         .astype(jnp.bfloat16))
+    y_ref = L.apply_norm(p, cfg, x)
+    y_opt = L.apply_norm(p, cfg.replace(bf16_elementwise=True), x)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_opt, np.float32),
+                               rtol=2e-2, atol=2e-2)

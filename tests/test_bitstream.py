@@ -1,0 +1,67 @@
+"""Bitstream encode/decode (Fig. 1 deployment arrow)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitstream, isa
+from repro.core.isa import PEInstr, asm
+from repro.core.program import Program, ProgramBuilder
+
+
+def test_roundtrip_known_program():
+    pb = ProgramBuilder(16, "bs")
+    pb.instr({0: asm("SMUL", "R2", "R0", "R1", imm=-7),
+              5: asm("LWI", "ROUT", "RCL", imm=123)})
+    pb.instr({p: asm("SADD", "ROUT", "IMM", "IMM", imm=p) for p in range(16)})
+    pb.exit()
+    prog = pb.build()
+    blob = bitstream.encode(prog)
+    back = bitstream.decode(blob, n_pes=16)
+    np.testing.assert_array_equal(prog.ops, back.ops)
+    np.testing.assert_array_equal(prog.dest, back.dest)
+    np.testing.assert_array_equal(prog.srcA, back.srcA)
+    np.testing.assert_array_equal(prog.srcB, back.srcB)
+    np.testing.assert_array_equal(prog.imm, back.imm)
+
+
+def test_bitstream_size_is_48_bits_per_slot():
+    pb = ProgramBuilder(16, "bs")
+    for _ in range(10):
+        pb.instr({})
+    pb.exit()
+    blob = bitstream.encode(pb.build())
+    n_slots = 11 * 16
+    assert len(blob) == (n_slots * isa.WORD_BITS + 7) // 8
+
+
+_NONBRANCH = sorted(set(range(isa.N_OPS)) - set(isa.BRANCH_OPS))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(
+    st.sampled_from(_NONBRANCH), st.integers(0, len(isa.DESTS) - 1),
+    st.integers(0, isa.N_SRCS - 1), st.integers(0, isa.N_SRCS - 1),
+    st.integers(-2**31, 2**31 - 1)), min_size=1, max_size=24))
+def test_roundtrip_random_slots(slots):
+    """Any decodable program survives encode->decode bit-exactly.
+
+    Branch opcodes are excluded: their immediates are program-counter
+    targets, which decode() semantically validates against program length.
+    """
+    T = len(slots)
+    ops = np.zeros((T, 4), np.int32)
+    dest = np.full((T, 4), isa.DEST_ROUT_ONLY, np.int32)
+    srcA = np.zeros((T, 4), np.int32)
+    srcB = np.zeros((T, 4), np.int32)
+    imm_a = np.zeros((T, 4), np.int32)
+    for t, (op, d, a, b, imm) in enumerate(slots):
+        ops[t, 0], dest[t, 0], srcA[t, 0], srcB[t, 0] = op, d, a, b
+        imm_a[t, 0] = np.int64(imm).astype(np.int32)
+    prog = Program(name="hyp", ops=ops, dest=dest, srcA=srcA,
+                   srcB=srcB, imm=imm_a)
+    blob = bitstream.encode(prog)
+    back = bitstream.decode(blob, n_pes=4)
+    np.testing.assert_array_equal(prog.ops, back.ops)
+    np.testing.assert_array_equal(prog.imm, back.imm)
+    np.testing.assert_array_equal(prog.srcA, back.srcA)
+    np.testing.assert_array_equal(prog.srcB, back.srcB)
+    np.testing.assert_array_equal(prog.dest, back.dest)

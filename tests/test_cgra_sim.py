@@ -1,0 +1,242 @@
+"""Unit + differential (hypothesis) tests of the behavioral simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+from repro.core.cgra import run_program
+from repro.core.isa import asm
+from repro.core.program import ProgramBuilder
+
+from .ref_interp import run_reference
+
+MEM = 256
+
+
+def _run(pb, mem=None, max_steps=64):
+    mem = np.zeros(MEM, np.int32) if mem is None else mem
+    final, trace = run_program(pb.build(), mem, max_steps=max_steps,
+                               mem_size=MEM)
+    return final, trace
+
+
+def _pb():
+    return ProgramBuilder(16, "t")
+
+
+# ---------------------------------------------------------------------------
+# ISA semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,a,b,want", [
+    ("SADD", 5, 7, 12), ("SSUB", 5, 7, -2), ("SMUL", -3, 7, -21),
+    ("SLL", 3, 2, 12), ("SRL", -1, 28, 15), ("SRA", -16, 2, -4),
+    ("LAND", 12, 10, 8), ("LOR", 12, 10, 14), ("LXOR", 12, 10, 6),
+    ("SLT", -5, 3, 1), ("SLT", 3, -5, 0), ("MV", 42, 0, 42),
+])
+def test_alu_ops(op, a, b, want):
+    pb = _pb()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=a)})
+    pb.instr({0: asm("MV", "R1", "IMM", imm=b)})
+    pb.instr({0: asm(op, "R2", "R0", "R1")})
+    pb.exit()
+    final, _ = _run(pb)
+    assert int(final.regs[0, 2]) == want
+
+
+def test_rout_write_through():
+    """Every ALU/load op writes ROUT even with a register destination."""
+    pb = _pb()
+    pb.instr({0: asm("SADD", "R3", "IMM", "IMM", imm=21)})
+    pb.exit()
+    final, _ = _run(pb)
+    assert int(final.rout[0]) == 42 and int(final.regs[0, 3]) == 42
+
+
+def test_neighbour_reads_sample_instruction_start():
+    """All PEs see neighbours' pre-instruction ROUT (lockstep RTL)."""
+    pb = _pb()
+    pb.instr({p: asm("MV", "ROUT", "IMM", imm=p) for p in range(16)})
+    # everyone overwrites ROUT with RCL: a torus rotation, not a cascade
+    pb.instr({p: asm("MV", "ROUT", "RCL") for p in range(16)})
+    pb.exit()
+    final, _ = _run(pb)
+    idx = np.arange(16)
+    r, c = idx // 4, idx % 4
+    want = (r * 4 + (c - 1) % 4)
+    assert (np.asarray(final.rout) == want).all()
+
+
+def test_torus_wraparound_all_directions():
+    pb = _pb()
+    pb.instr({p: asm("MV", "ROUT", "IMM", imm=p) for p in range(16)})
+    pb.instr({0: asm("MV", "R0", "RCL"), 1: asm("MV", "R0", "RCR"),
+              2: asm("MV", "R0", "RCT"), 3: asm("MV", "R0", "RCB")})
+    pb.exit()
+    final, _ = _run(pb)
+    # PE0 (0,0): left wraps to (0,3)=3; PE1 right ->(0,2)=2;
+    # PE2 top wraps to (3,2)=14; PE3 bottom ->(1,3)=7
+    assert [int(final.regs[p, 0]) for p in range(4)] == [3, 2, 14, 7]
+
+
+def test_branch_lowest_pe_wins():
+    pb = _pb()
+    # PE3 and PE7 both branch, to different targets; PE3 must win.
+    pb.instr({3: asm("JUMP", imm=2), 7: asm("JUMP", imm=3)})
+    pb.instr({0: asm("MV", "R0", "IMM", imm=111)})   # skipped
+    pb.instr({0: asm("MV", "R1", "IMM", imm=222)})   # PE3's target
+    pb.exit()
+    final, _ = _run(pb)
+    assert int(final.regs[0, 0]) == 0 and int(final.regs[0, 1]) == 222
+
+
+@pytest.mark.parametrize("op,a,b,taken", [
+    ("BEQ", 4, 4, True), ("BEQ", 4, 5, False),
+    ("BNE", 4, 5, True), ("BNE", 4, 4, False),
+    ("BLT", -1, 0, True), ("BLT", 0, 0, False),
+    ("BGE", 0, 0, True), ("BGE", -1, 0, False),
+])
+def test_conditional_branches(op, a, b, taken):
+    pb = _pb()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=a)})
+    pb.instr({0: asm("MV", "R1", "IMM", imm=b)})
+    pb.instr({0: asm(op, a="R0", b="R1", imm=5)})
+    pb.instr({0: asm("MV", "R2", "IMM", imm=1)})   # fall-through marker
+    pb.exit()
+    pb.instr({0: asm("MV", "R3", "IMM", imm=2)})   # branch target marker
+    pb.exit()
+    final, _ = _run(pb)
+    if taken:
+        assert int(final.regs[0, 3]) == 2 and int(final.regs[0, 2]) == 0
+    else:
+        assert int(final.regs[0, 2]) == 1 and int(final.regs[0, 3]) == 0
+
+
+def test_store_arbitration_ascending_pe_order():
+    """Same-address stores in one instruction: highest PE's value lands."""
+    pb = _pb()
+    pb.instr({p: asm("MV", "R0", "IMM", imm=100 + p) for p in range(16)})
+    pb.instr({p: asm("SWD", a="R0", imm=7) for p in range(16)})
+    pb.exit()
+    final, _ = _run(pb)
+    assert int(final.mem[7]) == 115
+
+
+def test_load_store_roundtrip_indirect():
+    pb = _pb()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=13)})      # addr
+    pb.instr({0: asm("MV", "R1", "IMM", imm=-99)})     # value
+    pb.instr({0: asm("SWI", a="R0", b="R1")})
+    pb.instr({0: asm("LWI", "R2", "R0")})
+    pb.exit()
+    final, _ = _run(pb)
+    assert int(final.regs[0, 2]) == -99 and int(final.mem[13]) == -99
+
+
+def test_exit_halts_and_masks():
+    pb = _pb()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=1)})
+    pb.exit()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=2)})  # must never run
+    final, trace = _run(pb, max_steps=16)
+    assert int(final.regs[0, 0]) == 1
+    assert bool(final.done)
+    # steps after EXIT are masked invalid in the trace
+    assert int(np.asarray(trace.valid).sum()) == 2
+
+
+def test_lockstep_latency_is_max_over_pes():
+    """An instruction retires with the slowest PE: SMUL (3cc) dominates."""
+    pb = _pb()
+    pb.instr({0: asm("SMUL", "R0", "IMM", "IMM", imm=3),
+              1: asm("SADD", "R0", "IMM", "IMM", imm=3)})
+    pb.exit()
+    final, trace = _run(pb)
+    lat = np.asarray(trace.lat)
+    assert int(lat[0]) == 3            # SMUL latency, not SADD's 1
+    assert int(final.t_cc) == 3 + 1    # + EXIT
+
+
+def test_memory_contention_serializes_on_1toM():
+    """16 parallel loads on the single-port bus: completion = 15 + t_mem."""
+    pb = _pb()
+    pb.instr({p: asm("LWD", "R0", imm=p) for p in range(16)})
+    pb.exit()
+    _, trace = _run(pb)
+    assert int(np.asarray(trace.lat)[0]) == 15 + 2
+
+
+# ---------------------------------------------------------------------------
+# Differential testing vs the pure-Python reference interpreter
+# ---------------------------------------------------------------------------
+
+_SRC_NAMES = list(isa.SOURCES)
+_ALU_NAMES = ["SADD", "SSUB", "SMUL", "SLL", "SRL", "SRA", "LAND", "LOR",
+              "LXOR", "SLT", "MV"]
+_DEST_NAMES = list(isa.DESTS)
+
+
+@st.composite
+def straightline_programs(draw):
+    """Random branch-free programs over the full ALU + memory ISA."""
+    n_instr = draw(st.integers(2, 12))
+    pb = ProgramBuilder(16, "hyp")
+    for _ in range(n_instr):
+        slots = {}
+        for p in range(16):
+            if draw(st.booleans()):
+                continue  # NOP slot
+            kind = draw(st.sampled_from(["alu", "alu", "alu", "lwd", "swd",
+                                         "lwi", "swi"]))
+            imm = draw(st.integers(-2**31, 2**31 - 1))
+            addr = draw(st.integers(0, MEM - 1))
+            dest = draw(st.sampled_from(_DEST_NAMES))
+            a = draw(st.sampled_from(_SRC_NAMES))
+            b = draw(st.sampled_from(_SRC_NAMES))
+            if kind == "alu":
+                op = draw(st.sampled_from(_ALU_NAMES))
+                slots[p] = asm(op, dest, a, b, imm)
+            elif kind == "lwd":
+                slots[p] = asm("LWD", dest, imm=addr)
+            elif kind == "swd":
+                slots[p] = asm("SWD", a=a, imm=addr)
+            elif kind == "lwi":
+                slots[p] = asm("LWI", dest, a, imm=addr)
+            else:
+                slots[p] = asm("SWI", a=a, b=b, imm=addr)
+        pb.instr(slots)
+    pb.exit()
+    mem = draw(st.lists(st.integers(-2**31, 2**31 - 1),
+                        min_size=MEM, max_size=MEM))
+    return pb.build(), np.array(mem, np.int64).astype(np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(straightline_programs())
+def test_simulator_matches_reference(case):
+    """JAX simulator == independent Python interpreter, bit-for-bit.
+
+    Indirect addresses are taken mod mem_size in both, so arbitrary int32
+    operand values are legal addresses."""
+    program, mem = case
+    final, _ = run_program(program, mem, max_steps=program.n_instrs + 2,
+                           mem_size=MEM)
+    regs_r, rout_r, mem_r, _, _ = run_reference(program, mem,
+                                                max_steps=program.n_instrs + 2)
+    np.testing.assert_array_equal(np.asarray(final.regs, np.int64), regs_r)
+    np.testing.assert_array_equal(np.asarray(final.rout, np.int64), rout_r)
+    np.testing.assert_array_equal(np.asarray(final.mem, np.int64), mem_r)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+def test_smul_wraps_int32(x, y):
+    pb = _pb()
+    pb.instr({0: asm("MV", "R0", "IMM", imm=x)})
+    pb.instr({0: asm("MV", "R1", "IMM", imm=y)})
+    pb.instr({0: asm("SMUL", "R2", "R0", "R1")})
+    pb.exit()
+    final, _ = _run(pb)
+    want = (x * y) & 0xFFFFFFFF
+    want = want - (1 << 32) if want >= (1 << 31) else want
+    assert int(final.regs[0, 2]) == want

@@ -1,0 +1,89 @@
+"""Pallas flash-attention kernel vs the jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _rand(key, B, H, S, T, hd, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, H, T, hd), dtype)
+    v = jax.random.normal(ks[2], (B, H, T, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_ref_basic(causal, dtype):
+    q, k, v = _rand(jax.random.key(0), 2, 3, 128, 128, 64, dtype)
+    got = flash_attention(q, k, v, causal=causal, blk_q=64, blk_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_sliding_window_matches_ref():
+    q, k, v = _rand(jax.random.key(1), 1, 2, 256, 256, 32, jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=64, blk_q=64,
+                          blk_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cross_attention_rectangular():
+    q, k, v = _rand(jax.random.key(2), 1, 2, 64, 192, 32, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, blk_q=32, blk_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_wrapper_matches_model_reference():
+    """ops.attention (GQA expand) == models.layers reference attention."""
+    from repro.configs import get_smoke_config
+    from repro.models import layers as L
+
+    cfg = get_smoke_config("llama3.2-1b")
+    B, S, H, KV, hd = 2, 32, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    got = attention(q, k, v, causal=True, impl="pallas_interpret",
+                    blk_q=16, blk_k=16)
+    logits = L._gqa_scores(q, k, 1.0 / np.sqrt(hd)).astype(jnp.float32)
+    m = L.causal_window_mask(S, S, None)
+    logits = jnp.where(m[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, -1).astype(jnp.float32)
+    want = L._gqa_combine(probs, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([32, 64, 128]), st.sampled_from([32, 64]),
+       st.sampled_from([16, 32, 64]), st.booleans(),
+       st.sampled_from(["float32", "bfloat16"]))
+def test_shape_dtype_sweep(S, blk, hd, causal, dtype):
+    """Hypothesis sweep over shapes/dtypes/blocks (per-kernel contract)."""
+    dt = jnp.dtype(dtype)
+    q, k, v = _rand(jax.random.key(S * blk + hd), 1, 2, S, S, hd, dt)
+    blk = min(blk, S)
+    got = flash_attention(q, k, v, causal=causal, blk_q=blk, blk_k=blk,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)

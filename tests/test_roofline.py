@@ -1,0 +1,83 @@
+"""Roofline analysis: collective parser, term math, table generation."""
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import (HW_V5E, cell_roofline, model_flops,
+                                     active_matmul_params, roofline_table)
+from repro.configs import get_config
+from repro.launch.dryrun import collective_bytes
+from repro.models.config import SHAPES
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,4096,2048]{2,1,0} all-reduce(%x), to_apply=%add.promoted
+  %ag = bf16[256,1024]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%z), to_apply=%add.2
+  %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%p, %q)
+  %cp = bf16[32]{0} collective-permute(%w)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out, counts, top, out_tpu = collective_bytes(HLO)
+    assert out["all-reduce"] == 16 * 4096 * 2048 * 4
+    assert out["all-gather"] == 256 * 1024 * 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["all-to-all"] == 2 * 8 * 8 * 4
+    assert out["collective-permute"] == 32 * 2
+    assert counts["all-reduce"] == 1
+    # promoted (CPU float-normalization) all-reduce halves on TPU
+    assert out_tpu["all-reduce"] == out["all-reduce"] // 2
+    assert out_tpu["all-gather"] == out["all-gather"]
+
+
+def test_cell_roofline_terms():
+    rec = {"arch": "olmo-1b", "shape": "train_4k", "mesh": "single",
+           "status": "ok", "n_devices": 256,
+           "flops_per_device": 197e12,          # exactly 1 s of compute
+           "bytes_per_device": 819e9,           # exactly 1 s of HBM
+           "collective_bytes": {"all-reduce": 100e9},
+           "collective_bytes_tpu": {"all-reduce": 50e9}}
+    t = cell_roofline(rec)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)   # tpu-corrected 50e9/50e9
+    assert t.roofline_s == pytest.approx(1.0)
+    assert t.step_s == pytest.approx(3.0)
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_model_flops_conventions():
+    cfg = get_config("olmo-1b")
+    n = active_matmul_params(cfg)
+    # olmo-1b: ~1.07e9 layer params + head ~103e6
+    assert 0.9e9 < n < 1.6e9
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_pre = model_flops(cfg, SHAPES["prefill_32k"])
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_train == pytest.approx(6 * n * 256 * 4096)
+    assert f_pre == pytest.approx(2 * n * 32 * 32768)
+    assert f_dec == pytest.approx(2 * n * 128)
+
+
+def test_moe_counts_active_experts_only():
+    cfg = get_config("mixtral-8x22b")
+    n = active_matmul_params(cfg)
+    # active ~ (attn + router + 2-of-8 experts) * 56 + head: ~39-45e9,
+    # far below the ~141e9 total
+    assert 30e9 < n < 60e9
+
+
+def test_roofline_table_renders(tmp_path):
+    import json
+    rec = {"arch": "olmo-1b", "shape": "train_4k", "mesh": "single",
+           "status": "ok", "n_devices": 256, "flops_per_device": 1e12,
+           "bytes_per_device": 1e11,
+           "collective_bytes": {"all-reduce": 1e9}}
+    skip = {"arch": "olmo-1b", "shape": "long_500k", "mesh": "single",
+            "status": "skip", "reason": "skip(full-attn)"}
+    tbl = roofline_table([rec, skip], mesh="single")
+    assert "olmo-1b" in tbl and "skip(full-attn)" in tbl
+    assert "**" in tbl   # a dominant term is marked

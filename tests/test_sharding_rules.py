@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules: divisibility fallback, combined axes, and
+per-arch spec derivation (meshes are built abstractly; no devices needed).
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import make_model
+from repro.models.config import SHAPES
+from repro.parallel.sharding import (ShardingRules, logical_to_spec,
+                                     spec_tree)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape (dict) is consulted by the rules."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH1 = FakeMesh(data=16, model=16)
+MESH2 = FakeMesh(pod=2, data=16, model=16)
+
+
+def spec(logical, shape, mesh=MESH1, rules=None):
+    return logical_to_spec(logical, shape, mesh, rules or ShardingRules())
+
+
+def test_tp_shards_divisible_dims():
+    assert spec(("embed", "mlp"), (2048, 8192)) == P("data", "model")
+
+
+def test_fallback_replicates_non_divisible():
+    # 15 heads do not divide 16 -> replicated
+    assert spec(("embed", "heads", None), (960, 15, 64)) == P("data")
+
+
+def test_combined_batch_axis_multi_pod():
+    assert spec(("batch", None), (256, 4096), MESH2) == P(("pod", "data"))
+    # batch=1 (long_500k): nothing divides -> replicated
+    assert spec(("batch", None), (1, 1), MESH2) == P()
+
+
+def test_combined_prefix_degradation():
+    # batch 2 divides pod (2) but not pod*data -> only pod is claimed
+    assert spec(("batch", None), (2, 128), MESH2) == P("pod")
+
+
+def test_axis_used_at_most_once_per_tensor():
+    s = spec(("vocab", "embed_tp"), (32768, 6144))
+    # both want "model"; the second must fall back
+    assert s == P("model")
+
+
+def test_expert_fallback_chain():
+    # granite: 32 experts / 16 = EP over model
+    s = spec(("experts", "embed", "expert_mlp"), (32, 1024, 512))
+    assert s == P("model", "data")
+    # mixtral: 8 experts -> replicated experts, TP on the hidden dim
+    s = spec(("experts", "embed", "expert_mlp"), (8, 6144, 16384))
+    assert s == P(None, "data", "model")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_resolve_for_every_arch(arch):
+    """Every parameter of every full-size arch gets a valid PartitionSpec
+    on the production mesh shape (divisibility honored)."""
+    model = make_model(get_config(arch))
+    pshapes, paxes = model.param_shapes()
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_ax = jax.tree.leaves(paxes, is_leaf=is_ax)
+    flat_sh = jax.tree.leaves(pshapes)
+    rules = ShardingRules()
+    total, sharded = 0, 0
+    for axes, sds in zip(flat_ax, flat_sh):
+        ps = logical_to_spec(axes, sds.shape, MESH1, rules)
+        # every named axis in the spec must divide the dimension
+        for dim, names in zip(sds.shape, tuple(ps) + (None,) * 10):
+            if names is None:
+                continue
+            group = names if isinstance(names, tuple) else (names,)
+            sz = int(np.prod([MESH1.shape[n] for n in group]))
+            assert dim % sz == 0, (arch, axes, sds.shape, ps)
+        total += 1
+        if any(s is not None for s in tuple(ps)):
+            sharded += 1
+    # the bulk of parameters must actually shard (FSDP/TP), not replicate
+    assert sharded / total > 0.5, (arch, sharded, total)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mixtral-8x22b",
+                                  "zamba2-2.7b"])
+def test_fsdp_fits_16gb_per_device(arch):
+    """Param + AdamW moments bytes per device on the single pod must fit
+    v5e HBM (16 GB) with room for activations."""
+    model = make_model(get_config(arch))
+    pshapes, paxes = model.param_shapes()
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_ax = jax.tree.leaves(paxes, is_leaf=is_ax)
+    flat_sh = jax.tree.leaves(pshapes)
+    rules = ShardingRules()
+    per_dev = 0
+    for axes, sds in zip(flat_ax, flat_sh):
+        ps = logical_to_spec(axes, sds.shape, MESH1, rules)
+        shard_elems = int(np.prod(sds.shape))
+        for names in tuple(ps):
+            if names is None:
+                continue
+            group = names if isinstance(names, tuple) else (names,)
+            shard_elems //= int(np.prod([MESH1.shape[n] for n in group]))
+        per_dev += shard_elems * 4          # f32
+    total_state = per_dev * 3               # params + mu + nu
+    assert total_state < 12e9, (arch, total_state / 1e9)

@@ -1,0 +1,73 @@
+"""End-to-end behaviour of the paper's workflow (Fig. 1, all arrows):
+characterize once -> simulate + estimate any kernel instantly -> explore
+software mappings and hardware topologies -> encode the bitstream."""
+import numpy as np
+import pytest
+
+from repro.apps import conv, mibench
+from repro.core import (bitstream, detailed, estimate, estimate_all_cases,
+                        errors_vs_detailed)
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import TOPOLOGIES, baseline
+from repro.core.physical import DEFAULT_PHYS
+
+
+def test_full_workflow_software_exploration(profile):
+    """Same hardware, same function, different instructions (paper §3.1):
+    the estimator must RANK the four mappings identically to the detailed
+    reference on both latency and energy."""
+    est_lat, ref_lat, est_en, ref_en = {}, {}, {}, {}
+    for k in conv.all_mappings():
+        final, trace = k.run()
+        assert k.check(np.asarray(final.mem))
+        ref = detailed.report(k.program, trace, baseline(), DEFAULT_PHYS)
+        e = estimate(k.program, trace, profile, baseline(), "vi")
+        est_lat[k.name], ref_lat[k.name] = e.latency_cc, ref.latency_cc
+        est_en[k.name], ref_en[k.name] = e.energy_pj, ref.energy_pj
+    rank = lambda d: sorted(d, key=d.get)
+    assert rank(est_lat) == rank(ref_lat), "latency ranking differs"
+    assert rank(est_en) == rank(ref_en), "energy ranking differs"
+
+
+def test_full_workflow_hardware_exploration(profile):
+    """Same function, same instructions, different hardware (paper §3.2):
+    qualitative Fig. 5 claims hold in our reproduction."""
+    k = conv.conv_wp()
+    res = {}
+    for name, mk in TOPOLOGIES.items():
+        hw = mk()
+        final, trace = k.run(hw=hw)
+        res[name] = estimate(k.program, trace, profile, hw, "vi")
+    base = res["baseline"]
+    # (a): latency down, energy roughly flat (3x SMUL power cancels)
+    assert res["a_fast_mul"].latency_cc < base.latency_cc
+    d_en = abs(res["a_fast_mul"].energy_pj - base.energy_pj) / base.energy_pj
+    assert d_en < 0.10
+    # (c)/(d): memory parallelism cuts latency AND energy, raises power
+    for m in ("c_interleaved", "d_dma_per_pe"):
+        assert res[m].latency_cc < base.latency_cc
+        assert res[m].energy_pj < base.energy_pj
+        assert res[m].power_mw > base.power_mw
+    # (d) is the strongest latency reduction
+    assert res["d_dma_per_pe"].latency_cc == min(
+        r.latency_cc for r in res.values())
+
+
+def test_bitstream_roundtrip_of_explored_kernel():
+    k = conv.im2col_ip()
+    blob = bitstream.encode(k.program)
+    back = bitstream.decode(blob, n_pes=16)
+    np.testing.assert_array_equal(k.program.ops, back.ops)
+    np.testing.assert_array_equal(k.program.imm, back.imm)
+
+
+def test_estimator_is_instant_after_characterization(profile):
+    """Estimation from a trace must not re-run characterization (the
+    one-time-cost contract): wall time well under a second per kernel."""
+    import time
+    k = mibench.bitcnt()
+    final, trace = k.run()
+    t0 = time.perf_counter()
+    estimate_all_cases(k.program, trace, profile, baseline())
+    dt = time.perf_counter() - t0
+    assert dt < 2.0, dt
