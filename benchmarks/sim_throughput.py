@@ -1,8 +1,20 @@
 """The "instantaneous result" claim (paper Section 1): design points per
-second through the fused simulate+estimate sweep, vs the trace-based
-single-point path.  The batched path is what runs mesh-sharded at fleet
-scale (core/dse.py)."""
+second through the fused simulate+estimate sweep.
+
+Three comparisons, all machine-readable in BENCH_sim_throughput.json so
+the perf trajectory is trackable across PRs:
+  * single-point trace path vs the batched fused path (the paper's win);
+  * sweep backends: XLA scan vs the fused multi-step Pallas engine
+    (kernels/cgra_sweep) across batch sizes.  Off-TPU the Pallas engine
+    runs in interpret mode -- a correctness proxy, not its speed; the
+    JSON records which mode ran;
+  * the estimator's memory-contention scheduler: seed S x P Python loop
+    vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16).
+"""
 from __future__ import annotations
+
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -11,42 +23,89 @@ import numpy as np
 from repro.apps import mibench
 from repro.core import dse, estimate
 from repro.core.characterization import default_profile
-from repro.core.hwconfig import TOPOLOGIES, stack_configs
+from repro.core.estimator import mem_completion_np, mem_completion_np_loop
+from repro.core.hwconfig import TOPOLOGIES, HwConfig, stack_configs
 
 from .common import Report, timeit
 
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim_throughput.json"
 
-def run() -> Report:
-    rep = Report("sim_throughput (design points / second)")
+BATCH_SIZES = (8, 64)
+
+
+def _bench_backends(rep: Report, rows: list) -> None:
     prof = default_profile()
     k = mibench.sha_mix()
     hws = [mk() for mk in TOPOLOGIES.values()]
-
-    # single-point trace path (compile excluded via warmup)
-    runner_single = None
 
     def single():
         final, trace = k.run()
         estimate(k.program, trace, prof, TOPOLOGIES["baseline"](), "vi")
 
+    def record(row: dict) -> None:
+        rows.append(row)
+        rep.add(**{k_: v for k_, v in row.items() if k_ != "backend"})
+
     t_single = timeit(single, repeats=3, warmup=1)
+    record(dict(path="single_trace", backend="trace", B=1,
+                seconds_per_batch=t_single, points_per_s=1.0 / t_single,
+                steps_per_s=k.max_steps / t_single, speedup_vs_single=1.0))
 
-    for B in (8, 64):
-        mems = np.broadcast_to(k.mem_init, (B, k.mem_init.size)).copy()
+    interpret = jax.default_backend() != "tpu"
+    for B in BATCH_SIZES:
+        mems = jnp.asarray(
+            np.broadcast_to(k.mem_init, (B, k.mem_init.size)).copy())
         hw_b = stack_configs([hws[i % len(hws)] for i in range(B)])
-        fn = dse.make_sweep_fn(k.program, prof, max_steps=k.max_steps)
-        jfn = jax.jit(fn)
-        mems_j = jnp.asarray(mems)
+        for backend in ("xla", "pallas"):
+            fn = jax.jit(dse.make_sweep_fn(
+                k.program, prof, max_steps=k.max_steps, backend=backend,
+                blk_b=min(32, B)))
 
-        def batched():
-            jax.block_until_ready(jfn(mems_j, hw_b))
+            def run_batch():
+                jax.block_until_ready(fn(mems, hw_b))
 
-        t = timeit(batched, repeats=3, warmup=1)
-        rep.add(path=f"fused_batch_{B}", seconds_per_batch=t,
-                points_per_s=B / t,
-                speedup_vs_single=(t_single * B) / t)
-    rep.add(path="single_trace", seconds_per_batch=t_single,
-            points_per_s=1.0 / t_single, speedup_vs_single=1.0)
+            t = timeit(run_batch, repeats=3, warmup=1)
+            label = backend + ("_interpret" if backend == "pallas"
+                               and interpret else "")
+            record(dict(path=f"{label}_batch_{B}", backend=label, B=B,
+                        seconds_per_batch=t, points_per_s=B / t,
+                        steps_per_s=B * k.max_steps / t,
+                        speedup_vs_single=(t_single * B) / t))
+
+
+def _bench_mem_completion(rep: Report) -> dict:
+    """Seed S x P double loop vs the vectorized greedy scheduler."""
+    S, P = 2048, 16
+    rng = np.random.default_rng(0)
+    is_mem = rng.random((S, P)) < 0.5
+    addr = rng.integers(0, 4096, (S, P))
+    hw = HwConfig(bus=1, interleaved=1, n_banks=4)
+    t_vec = timeit(lambda: mem_completion_np(is_mem, addr, hw, 4096, 4),
+                   repeats=5, warmup=1)
+    t_loop = timeit(lambda: mem_completion_np_loop(is_mem, addr, hw, 4096, 4),
+                    repeats=3, warmup=1)
+    speedup = t_loop / t_vec
+    rep.add(path="mem_completion_vectorized", B=f"{S}x{P}",
+            seconds_per_batch=t_vec, points_per_s=S / t_vec,
+            steps_per_s=S / t_vec, speedup_vs_single=speedup)
+    return dict(S=S, P=P, seconds_loop=t_loop, seconds_vectorized=t_vec,
+                speedup=speedup)
+
+
+def run() -> Report:
+    rep = Report("sim_throughput (design points / second)")
+    rows: list = []
+    _bench_backends(rep, rows)
+    mem_rec = _bench_mem_completion(rep)
+    payload = dict(
+        benchmark="sim_throughput",
+        jax_backend=jax.default_backend(),
+        pallas_interpret=jax.default_backend() != "tpu",
+        sweep=rows,
+        mem_completion=mem_rec,
+    )
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[bench] wrote {JSON_PATH}")
     return rep
 
 

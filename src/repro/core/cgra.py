@@ -121,13 +121,24 @@ def _branch_target(op_row, a, b, imm_row, pc):
 
 def _dedup_stores(is_store, addr):
     """Ascending-PE-order store arbitration: for duplicate addresses only
-    the highest-indexed PE's store lands (it is written last)."""
-    P = is_store.shape[0]
-    i = jnp.arange(P)
-    later_same = (is_store[None, :] & (addr[None, :] == addr[:, None])
-                  & (i[None, :] > i[:, None]))       # (P, P) j later than i
-    overwritten = later_same.any(axis=1)
-    return is_store & ~overwritten
+    the highest-indexed PE's store lands (it is written last).
+
+    O(P log P) sort-based last-writer-wins: stable-sort the requests by
+    address (non-stores pushed to the end with a sentinel key); within an
+    equal-address run the stable order is ascending PE, so the *last* store
+    of each run is the one that persists.  Replaces the former O(P^2)
+    pairwise broadcast matrix with identical semantics."""
+    sentinel = jnp.iinfo(jnp.int32).max
+    key = jnp.where(is_store, addr, sentinel)
+    order = jnp.argsort(key, stable=True)             # ties keep PE order
+    key_s = key[order]
+    store_s = is_store[order]
+    # last store of its equal-key run (a following non-store never competes)
+    is_last = jnp.concatenate([
+        (key_s[:-1] != key_s[1:]) | ~store_s[1:],
+        jnp.ones((1,), jnp.bool_)])
+    landed_s = store_s & is_last
+    return jnp.zeros_like(is_store).at[order].set(landed_s)
 
 
 def make_step(program: Program, rows: int, cols: int, mem_size: int):
@@ -145,7 +156,14 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int):
     is_store_t = jnp.asarray(isa.IS_STORE)[ops_t]
     writes_rout_t = jnp.asarray(isa.WRITES_ROUT)[ops_t]
 
-    def step(state: SimState, hw: HwConfig) -> Tuple[SimState, StepRecord]:
+    def step(state: SimState, hw: HwConfig,
+             live: Optional[jnp.ndarray] = None
+             ) -> Tuple[SimState, StepRecord]:
+        # `live` lets a caller mask execution beyond ~state.done (e.g. the
+        # chunked DSE sweep freezing lanes past their step budget); the
+        # default reproduces the original done-only masking bit-for-bit.
+        if live is None:
+            live = ~state.done
         pc = state.pc
         op_row = ops_t[pc]
         imm_row = imm_t[pc]
@@ -189,12 +207,11 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int):
         next_pc = jnp.clip(next_pc, 0, program.n_instrs - 1)
         exited = (op_row == isa.OP["EXIT"]).any()
 
-        live = ~state.done
         new_state = SimState(
             regs=jnp.where(live, regs_new, state.regs),
             rout=jnp.where(live, rout_new, state.rout),
             pc=jnp.where(live, next_pc, state.pc),
-            done=state.done | exited,
+            done=state.done | (live & exited),
             mem=jnp.where(live, mem_new, state.mem),
             t_cc=jnp.where(live, state.t_cc + lat, state.t_cc),
         )

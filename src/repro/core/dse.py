@@ -57,10 +57,38 @@ def _profile_tables(profile: Profile):
 
 
 def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
-                  cols: int = 4, mem_size: int = 4096, max_steps: int = 2048):
+                  cols: int = 4, mem_size: int = 4096, max_steps: int = 2048,
+                  backend: str = "xla", chunk_steps: Optional[int] = 64,
+                  blk_b: int = 32, interpret: Optional[bool] = None):
     """Build ``fn(mem_init (B,M), hw batched (B,)) -> SweepResult`` where the
     case-(vi) estimate is fused into the simulation scan (single pass, no
-    trace materialization -- O(1) memory per design point)."""
+    trace materialization -- O(1) memory per design point).
+
+    backend:
+      * ``"xla"``    -- vmapped ``lax.scan`` over ``core.cgra.make_step``
+        (the portable path);
+      * ``"pallas"`` -- the fused multi-step VMEM-resident engine
+        (``kernels.cgra_sweep``): K instructions per ``pallas_call``,
+        one HBM read of the program tables per batch tile.  ``interpret``
+        (default: auto, True off-TPU) runs it through the Pallas
+        interpreter so results are testable everywhere.
+    Both backends produce bit-identical latency_cc / checksum and energy
+    equal up to float32 accumulation order.
+
+    chunk_steps: issue the scan in K-step chunks and stop early once every
+    batch lane reports done (EXIT reached) -- short kernels stop paying
+    for ``max_steps``.  ``None`` disables chunking (single full-length
+    scan); results are identical either way.
+    """
+    if backend == "pallas":
+        from ..kernels.cgra_sweep.ops import make_pallas_sweep_fn
+        return make_pallas_sweep_fn(
+            program, profile, rows=rows, cols=cols, mem_size=mem_size,
+            max_steps=max_steps, chunk_steps=chunk_steps, blk_b=blk_b,
+            interpret=interpret)
+    if backend != "xla":
+        raise ValueError(f"unknown sweep backend: {backend!r}")
+
     step = make_step(program, rows, cols, mem_size)
     P = program.n_pes
     tbl = _profile_tables(profile)
@@ -74,11 +102,11 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
         state0 = init_state(mem_init, P)
         carry0 = (state0, jnp.float32(0.0), jnp.int32(-1))
 
-        def body(carry, _):
+        def body(carry, t):
             state, e_acc, prev_pc = carry
             pc = state.pc
-            live = ~state.done
-            new_state, rec = step(state, hw)
+            live = ~state.done & (t < max_steps)
+            new_state, rec = step(state, hw, live=live)
             # ---- fused case-(vi) estimate (mirrors estimator.py) ----------
             ops = ops_t[pc]
             smul = ops == isa.OP["SMUL"]
@@ -107,8 +135,25 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
             new_prev = jnp.where(live, pc, prev_pc)
             return (new_state, e_acc, new_prev), None
 
-        (final, e_uwcc, _), _ = jax.lax.scan(body, carry0, None,
-                                             length=max_steps)
+        if chunk_steps is None or chunk_steps >= max_steps:
+            carry, _ = jax.lax.scan(
+                body, carry0, jnp.arange(max_steps, dtype=jnp.int32))
+        else:
+            K = max(1, chunk_steps)
+
+            def chunk_cond(c):
+                t0, (state, _, _) = c
+                return (t0 < max_steps) & ~state.done
+
+            def chunk_body(c):
+                t0, carry = c
+                carry, _ = jax.lax.scan(
+                    body, carry, t0 + jnp.arange(K, dtype=jnp.int32))
+                return (t0 + K, carry)
+
+            _, carry = jax.lax.while_loop(chunk_cond, chunk_body,
+                                          (jnp.int32(0), carry0))
+        final, e_uwcc, _ = carry
         lat_cc = final.t_cc
         energy_pj = e_uwcc * tbl["t_clk_ns"] * 1e-3
         power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
@@ -121,24 +166,46 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
 
 def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
           mem_images: np.ndarray, *, mesh: Optional[jax.sharding.Mesh] = None,
-          max_steps: int = 2048, mem_size: int = 4096) -> SweepResult:
+          max_steps: int = 2048, mem_size: int = 4096,
+          backend: str = "xla", chunk_steps: Optional[int] = 64,
+          blk_b: int = 32, interpret: Optional[bool] = None) -> SweepResult:
     """Run the (hw x data) grid, optionally sharded over every device of a
-    mesh.  mem_images: (D, mem_size).  Grid is flattened to B = H*D."""
+    mesh.  mem_images: (D, mem_size).  Grid is flattened to B = H*D, row
+    ``h * D + d`` pairing hw_configs[h] with mem_images[d].
+
+    The grid is broadcast *by index*: the D distinct memory images go to
+    the device(s) once and each design point gathers its image inside the
+    jitted program -- the host never materializes the H*D*mem_size tiled
+    copy (a 512-config x 64-image sweep used to hold ~8 GB of redundant
+    int32 on the host; now it holds the 64 images).
+    """
     H, D = len(hw_configs), mem_images.shape[0]
     hw_b = stack_configs(list(hw_configs))
     # broadcast to the full grid
     hw_grid = jax.tree.map(lambda x: jnp.repeat(x, D, axis=0), hw_b)
-    mem_grid = jnp.asarray(np.tile(mem_images, (H, 1)), jnp.int32)
+    images = jnp.asarray(mem_images, jnp.int32)          # (D, M), one copy
+    img_idx = jnp.tile(jnp.arange(D, dtype=jnp.int32), H)  # (H*D,)
     fn = make_sweep_fn(program, profile, max_steps=max_steps,
-                       mem_size=mem_size)
-    if mesh is not None:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        flat_axes = tuple(mesh.axis_names)
-        sh = NamedSharding(mesh, P(flat_axes))
-        rep = NamedSharding(mesh, P())
-        mem_grid = jax.device_put(mem_grid, sh)
-        hw_grid = jax.tree.map(
-            lambda x: jax.device_put(x, sh) if x.ndim else x, hw_grid)
-        fn = jax.jit(fn, in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
-                     out_shardings=rep)
-    return fn(mem_grid, hw_grid)
+                       mem_size=mem_size, backend=backend,
+                       chunk_steps=chunk_steps, blk_b=blk_b,
+                       interpret=interpret)
+
+    def grid_fn(idx, hw):
+        return fn(jnp.take(images, idx, axis=0), hw)
+
+    if mesh is None:
+        return jax.jit(grid_fn)(img_idx, hw_grid)
+    if backend != "xla":
+        raise ValueError("mesh-sharded sweeps require backend='xla'")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    flat_axes = tuple(mesh.axis_names)
+    sh = NamedSharding(mesh, P(flat_axes))
+    rep = NamedSharding(mesh, P())
+    img_idx = jax.device_put(img_idx, sh)
+    hw_grid = jax.tree.map(
+        lambda x: jax.device_put(x, sh) if x.ndim else x, hw_grid)
+    grid_fn = jax.jit(
+        grid_fn,
+        in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
+        out_shardings=rep)
+    return grid_fn(img_idx, hw_grid)

@@ -23,17 +23,17 @@ from jax.experimental import pallas as pl
 from ...core import isa
 
 
-def _alu_kernel(ops_ref, a_ref, b_ref, o_ref):
-    ops = ops_ref[...]
-    a = a_ref[...]
-    b = b_ref[...]
+def alu_select(ops: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Branchless masked select over the full ALU ISA, shape-polymorphic.
+
+    Shared between this per-instruction kernel and the fused multi-step
+    sweep engine (kernels/cgra_sweep), so both dispatch paths are one code
+    path by construction.  Non-ALU opcodes yield 0, matching the
+    simulator's zero-filled dispatch table."""
     sh = b & 31
     res = jnp.zeros_like(a)
-
-    def sel(opname, val):
-        return jnp.where(ops == isa.OP[opname], val, res)
-
-    res = sel("SADD", a + b)
+    res = jnp.where(ops == isa.OP["SADD"], a + b, res)
     res = jnp.where(ops == isa.OP["SSUB"], a - b, res)
     res = jnp.where(ops == isa.OP["SMUL"], a * b, res)
     res = jnp.where(ops == isa.OP["SLL"], jax.lax.shift_left(a, sh), res)
@@ -46,7 +46,11 @@ def _alu_kernel(ops_ref, a_ref, b_ref, o_ref):
     res = jnp.where(ops == isa.OP["LXOR"], a ^ b, res)
     res = jnp.where(ops == isa.OP["SLT"], (a < b).astype(jnp.int32), res)
     res = jnp.where(ops == isa.OP["MV"], a, res)
-    o_ref[...] = res
+    return res
+
+
+def _alu_kernel(ops_ref, a_ref, b_ref, o_ref):
+    o_ref[...] = alu_select(ops_ref[...], a_ref[...], b_ref[...])
 
 
 def alu_dispatch(ops: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, *,

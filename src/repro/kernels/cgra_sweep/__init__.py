@@ -1,0 +1,9 @@
+"""Fused multi-step CGRA sweep engine (Pallas).
+
+Executes K CGRA instructions per ``pallas_call`` with the full
+per-design-point architectural state (registers, output registers, PC,
+done flags, scratchpad memory, energy accumulator) resident in VMEM,
+batched over the design-point axis.  See kernel.py for the engine and
+ops.py for the user-facing ``make_pallas_sweep_fn``.
+"""
+from .ops import make_pallas_sweep_fn  # noqa: F401

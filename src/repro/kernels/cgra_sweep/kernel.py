@@ -1,0 +1,261 @@
+"""Fused multi-step CGRA sweep engine: the Pallas kernel.
+
+One kernel invocation advances a (blk_b,)-lane tile of independent design
+points by K CGRA instructions, with every piece of architectural state --
+registers (blk_b, 4, P), output registers (blk_b, P), per-lane PC / done /
+cycle counter / case-(vi) energy accumulator, and the full (blk_b, M)
+scratchpad memory image -- resident in VMEM for the whole chunk.  The
+program tables (T, P) are read from HBM once per tile instead of once per
+instruction, which is the entire point: the XLA scan path re-reads state
+every step, while here HBM traffic is amortized K-fold.
+
+Fused per step, entirely on the VPU (no MXU use -- int32 lane math):
+  * per-lane PC gather of the instruction row (op/dest/srcA/srcB/imm),
+  * operand-source gather (immediates, register file, own/neighbour ROUT),
+  * branchless ALU dispatch over the full ISA (shared with the
+    kernels/cgra_step single-instruction kernel: alu_select),
+  * scratchpad load/store with last-writer-wins store arbitration,
+  * the bank/DMA pipelined-issue contention model (ascending-PE greedy
+    list scheduler, bit-identical to core/memory.py),
+  * lockstep retire timing and branch resolution,
+  * the case-(vi) energy estimate (decode + active + idle + operand-source
+    + datapath-switch terms, mirroring core/dse.py's fused estimate).
+
+Lanes that have executed EXIT (or exhausted the `max_steps` budget
+mid-chunk) are frozen by masking, so a chunk is always safe to overshoot;
+the host-side driver (ops.py) stops issuing chunks once every lane
+reports done -- the early-exit that makes short kernels stop paying for
+max_steps.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core import isa
+from ...core.hwconfig import BUS_N_TO_M
+from ...core.memory import MAX_BANKS
+from ..cgra_step.kernel import alu_select
+
+# Column layout of the packed per-lane integer hardware descriptor.
+HW_INT_FIELDS = ("smul_lat", "bus", "interleaved", "n_banks",
+                 "dma_per_pe", "t_mem")
+
+
+def _gather_rows(table, pc):
+    """(T, P) table, (blk,) per-lane pc -> (blk, P) rows."""
+    return jnp.take(table, pc, axis=0, mode="clip")
+
+
+def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
+                       n_instrs: int, k_steps: int, max_steps: int,
+                       p_idle: float, e_sw_op: float, e_sw_mux: float,
+                       mulzero: float) -> Callable:
+    """Build the fused K-step kernel body (closed over all static config)."""
+    P = rows * cols
+    T = n_instrs
+    M = mem_size
+    # Torus neighbour reads are grid rotations: gathering rout by the
+    # neighbour index map equals jnp.roll on the (rows, cols) view, which
+    # lowers to static slices -- no captured index constants in the kernel.
+    NBR_ROLL = {"RCL": (1, 2), "RCR": (-1, 2), "RCT": (1, 1), "RCB": (-1, 1)}
+    OP_SMUL = isa.OP["SMUL"]
+    OP_EXIT = isa.OP["EXIT"]
+    OP_LWD, OP_SWD = isa.OP["LWD"], isa.OP["SWD"]
+    OP_BEQ, OP_BNE = isa.OP["BEQ"], isa.OP["BNE"]
+    OP_BLT, OP_BGE, OP_JUMP = isa.OP["BLT"], isa.OP["BGE"], isa.OP["JUMP"]
+
+    def _operands(sel, imm_row, regs, rout):
+        """(blk, P) source selectors -> (blk, P) operand values."""
+        blk = sel.shape[0]
+        rout_grid = rout.reshape(blk, rows, cols)
+        val = jnp.zeros_like(imm_row)
+        val = jnp.where(sel == isa.SRC["IMM"], imm_row, val)
+        for r in range(4):
+            val = jnp.where(sel == isa.SRC[f"R{r}"], regs[:, r, :], val)
+        val = jnp.where(sel == isa.SRC["ROUT"], rout, val)
+        for name, (shift, axis) in NBR_ROLL.items():
+            nbr_val = jnp.roll(rout_grid, shift, axis=axis).reshape(blk, P)
+            val = jnp.where(sel == isa.SRC[name], nbr_val, val)
+        return val
+
+    def _dedup(is_store, addr):
+        """Last-writer-wins store arbitration, lane-batched.  P is tiny
+        (16), so the P x P pairwise compare stays in registers -- the
+        sort-based O(P log P) form lives in core/cgra.py for the scan
+        path."""
+        i_row = jax.lax.broadcasted_iota(jnp.int32, (1, P, P), 1)
+        j_col = jax.lax.broadcasted_iota(jnp.int32, (1, P, P), 2)
+        later = (is_store[:, None, :]
+                 & (addr[:, None, :] == addr[:, :, None])
+                 & (j_col > i_row))
+        return is_store & ~later.any(axis=2)
+
+    def _mem_completion(is_mem, addr, bus, interleaved, n_banks,
+                        dma_per_pe, t_mem):
+        """Lane-batched pipelined-issue contention model; ascending-PE
+        greedy list scheduler, bit-identical to core/memory.py."""
+        nb = jnp.maximum(n_banks, 1)
+        bank_words = jnp.maximum(M // nb, 1)
+        interleave_bank = addr % nb[:, None]
+        blocked_bank = jnp.clip(addr // bank_words[:, None], 0,
+                                (n_banks - 1)[:, None])
+        bank = jnp.where(interleaved[:, None] > 0, interleave_bank,
+                         blocked_bank)
+        bank = jnp.where(bus[:, None] == BUS_N_TO_M, bank, 0)
+        pe = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
+        dma = jnp.where(dma_per_pe[:, None] > 0, pe, pe % cols)
+        blk = is_mem.shape[0]
+        bank_free = jnp.zeros((blk, MAX_BANKS), jnp.int32)
+        dma_free = jnp.zeros((blk, P), jnp.int32)
+        bank_ids = jax.lax.broadcasted_iota(jnp.int32, (1, MAX_BANKS), 1)
+        dma_ids = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
+        done_cols = []
+        for p in range(P):
+            req = is_mem[:, p]
+            b = bank[:, p]
+            d = dma[:, p]
+            bf = jnp.take_along_axis(bank_free, b[:, None], axis=1)[:, 0]
+            df = jnp.take_along_axis(dma_free, d[:, None], axis=1)[:, 0]
+            slot = jnp.maximum(bf, df)
+            hit_b = (bank_ids == b[:, None]) & req[:, None]
+            bank_free = jnp.where(hit_b, (slot + 1)[:, None], bank_free)
+            hit_d = (dma_ids == d[:, None]) & req[:, None]
+            dma_free = jnp.where(hit_d, (slot + 1)[:, None], dma_free)
+            done_cols.append(jnp.where(req, slot + t_mem, 0))
+        return jnp.stack(done_cols, axis=1).astype(jnp.int32)
+
+    def kernel(start_ref, ops_ref, dest_ref, srcA_ref, srcB_ref, imm_ref,
+               isld_ref, isst_ref, wr_ref, kA_ref, kB_ref,
+               pdec_ref, pact_ref, esrc_ref, hwi_ref, hwf_ref,
+               mem_ref, regs_ref, rout_ref, pc_ref, done_ref, tcc_ref,
+               eacc_ref, prev_ref,
+               omem_ref, oregs_ref, orout_ref, opc_ref, odone_ref,
+               otcc_ref, oeacc_ref, oprev_ref):
+        start = start_ref[0]
+        ops_t = ops_ref[...]
+        dest_t = dest_ref[...]
+        srcA_t = srcA_ref[...]
+        srcB_t = srcB_ref[...]
+        imm_t = imm_ref[...]
+        isld_t = isld_ref[...]
+        isst_t = isst_ref[...]
+        wr_t = wr_ref[...]
+        kA_t = kA_ref[...]
+        kB_t = kB_ref[...]
+        p_dec = pdec_ref[...]
+        p_act = pact_ref[...]
+        e_src = esrc_ref[...]
+        hw_i = hwi_ref[...]
+        smul_lat = hw_i[:, 0]
+        bus = hw_i[:, 1]
+        interleaved = hw_i[:, 2]
+        n_banks = hw_i[:, 3]
+        dma_per_pe = hw_i[:, 4]
+        t_mem = hw_i[:, 5]
+        smul_scale = hwf_ref[...]
+        blk = smul_lat.shape[0]
+        lane_rows = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
+
+        def step(k, carry):
+            mem, regs, rout, pc, done, t_cc, e_acc, prev_pc = carry
+            budget_ok = start + k < max_steps
+            live = (done == 0) & budget_ok                    # (blk,)
+            op_row = _gather_rows(ops_t, pc)                  # (blk, P)
+            imm_row = _gather_rows(imm_t, pc)
+            a = _operands(_gather_rows(srcA_t, pc), imm_row, regs, rout)
+            b = _operands(_gather_rows(srcB_t, pc), imm_row, regs, rout)
+
+            # ---- memory --------------------------------------------------
+            is_load = _gather_rows(isld_t, pc) > 0
+            is_store = _gather_rows(isst_t, pc) > 0
+            direct = (op_row == OP_LWD) | (op_row == OP_SWD)
+            addr = jnp.where(direct, imm_row, a) % M
+            load_val = jnp.take_along_axis(mem, addr, axis=1)
+            store_val = jnp.where(op_row == OP_SWD, a, b)
+            landed = _dedup(is_store, addr) & live[:, None]
+            mem = mem.at[lane_rows, jnp.where(landed, addr, M)].set(
+                jnp.where(landed, store_val, 0), mode="drop")
+
+            # ---- ALU + writeback -----------------------------------------
+            alu = alu_select(op_row, a, b)
+            result = jnp.where(is_load, load_val, alu)
+            writes = _gather_rows(wr_t, pc) > 0
+            rout_new = jnp.where(writes, result, rout)
+            d_row = _gather_rows(dest_t, pc)
+            regs_new = jnp.stack(
+                [jnp.where(writes & (d_row == r), result, regs[:, r, :])
+                 for r in range(4)], axis=1)
+
+            # ---- timing --------------------------------------------------
+            is_mem_row = is_load | is_store
+            mem_done = _mem_completion(is_mem_row, addr, bus, interleaved,
+                                       n_banks, dma_per_pe, t_mem)
+            alu_lat = jnp.where(op_row == OP_SMUL, smul_lat[:, None], 1)
+            busy = jnp.where(is_mem_row, mem_done, alu_lat).astype(jnp.int32)
+            lat = busy.max(axis=1)
+
+            # ---- control -------------------------------------------------
+            taken = (((op_row == OP_BEQ) & (a == b))
+                     | ((op_row == OP_BNE) & (a != b))
+                     | ((op_row == OP_BLT) & (a < b))
+                     | ((op_row == OP_BGE) & (a >= b))
+                     | (op_row == OP_JUMP))
+            any_taken = taken.any(axis=1)
+            first = jnp.argmax(taken, axis=1)     # lowest PE wins
+            target = jnp.take_along_axis(imm_row, first[:, None],
+                                         axis=1)[:, 0]
+            next_pc = jnp.clip(jnp.where(any_taken, target, pc + 1),
+                               0, T - 1).astype(jnp.int32)
+            exited = (op_row == OP_EXIT).any(axis=1)
+
+            # ---- fused case-(vi) energy (mirrors core/dse.py) ------------
+            smul = op_row == OP_SMUL
+            scale = jnp.where(smul, smul_scale[:, None], 1.0)
+            wait = jnp.maximum(lat[:, None] - busy, 0).astype(jnp.float32)
+            active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
+            gate = jnp.where(smul & ((a == 0) | (b == 0)), mulzero, 1.0)
+            prev_ok = (prev_pc >= 0)[:, None]
+            prev_safe = jnp.maximum(prev_pc, 0)
+            op_ch = prev_ok & (op_row != _gather_rows(ops_t, prev_safe))
+            a_ch = prev_ok & (_gather_rows(srcA_t, pc)
+                              != _gather_rows(srcA_t, prev_safe))
+            b_ch = prev_ok & (_gather_rows(srcB_t, pc)
+                              != _gather_rows(srcB_t, prev_safe))
+            e_step = (p_dec[op_row] * scale
+                      + p_act[op_row] * scale * gate * active
+                      + p_idle * wait
+                      + e_src[_gather_rows(kA_t, pc)]
+                      + e_src[_gather_rows(kB_t, pc)]
+                      + op_ch * e_sw_op
+                      + (a_ch.astype(jnp.float32)
+                         + b_ch.astype(jnp.float32)) * e_sw_mux
+                      ).sum(axis=1)
+
+            # ---- live-masked state advance -------------------------------
+            lv = live[:, None]
+            return (mem,                       # stores already live-masked
+                    jnp.where(lv[:, :, None], regs_new, regs),
+                    jnp.where(lv, rout_new, rout),
+                    jnp.where(live, next_pc, pc),
+                    jnp.where(live & exited, 1, done).astype(jnp.int32),
+                    jnp.where(live, t_cc + lat, t_cc),
+                    e_acc + jnp.where(live, e_step, 0.0),
+                    jnp.where(live, pc, prev_pc))
+
+        carry = (mem_ref[...], regs_ref[...], rout_ref[...], pc_ref[...],
+                 done_ref[...], tcc_ref[...], eacc_ref[...], prev_ref[...])
+        carry = jax.lax.fori_loop(0, k_steps, step, carry)
+        mem, regs, rout, pc, done, t_cc, e_acc, prev_pc = carry
+        omem_ref[...] = mem
+        oregs_ref[...] = regs
+        orout_ref[...] = rout
+        opc_ref[...] = pc
+        odone_ref[...] = done
+        otcc_ref[...] = t_cc
+        oeacc_ref[...] = e_acc
+        oprev_ref[...] = prev_pc
+
+    return kernel

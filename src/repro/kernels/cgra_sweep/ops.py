@@ -1,0 +1,145 @@
+"""Driver for the fused multi-step Pallas sweep engine.
+
+``make_pallas_sweep_fn`` builds a jitted ``fn(mem_init (B, M), hw batched
+(B,)) -> SweepResult`` with the same contract as the XLA path built by
+``core.dse.make_sweep_fn(backend="xla")``: bit-identical latency and
+checksum, energy equal to float32 accumulation order.
+
+Chunked early exit: the host loop issues K-instruction chunks through one
+``pallas_call`` each and stops as soon as every batch lane reports done,
+so short kernels stop paying for ``max_steps``.  A chunk may overshoot
+the ``max_steps`` budget; the kernel freezes lanes past it, keeping
+results identical to a full-length scan.
+
+``interpret=None`` auto-selects Pallas interpret mode off-TPU so the
+engine (and its tests) run everywhere, including CPU CI.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...core import isa
+from ...core.characterization import Profile
+from ...core.hwconfig import HwConfig
+from ...core.program import Program
+from .kernel import HW_INT_FIELDS, build_sweep_kernel
+
+
+def make_pallas_sweep_fn(program: Program, profile: Profile, *,
+                         rows: int = 4, cols: int = 4, mem_size: int = 4096,
+                         max_steps: int = 2048,
+                         chunk_steps: Optional[int] = 64,
+                         blk_b: int = 32,
+                         interpret: Optional[bool] = None):
+    """Build the Pallas-backed sweep function (see module docstring)."""
+    from ...core.dse import SweepResult   # function-level: avoids cycle
+
+    P = program.n_pes
+    assert P == rows * cols
+    T = program.n_instrs
+    M = mem_size
+    K = max(1, min(chunk_steps or max_steps, max_steps))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # Program tables + static per-slot masks, one HBM read per tile.
+    ops_t = jnp.asarray(program.ops, jnp.int32)
+    dest_t = jnp.asarray(program.dest, jnp.int32)
+    srcA_t = jnp.asarray(program.srcA, jnp.int32)
+    srcB_t = jnp.asarray(program.srcB, jnp.int32)
+    imm_t = jnp.asarray(program.imm, jnp.int32)
+    isld_t = jnp.asarray(isa.IS_LOAD[program.ops], jnp.int32)
+    isst_t = jnp.asarray(isa.IS_STORE[program.ops], jnp.int32)
+    wr_t = jnp.asarray(isa.WRITES_ROUT[program.ops], jnp.int32)
+    kA_t = jnp.asarray(isa.SRC_KIND[program.srcA], jnp.int32)
+    kB_t = jnp.asarray(isa.SRC_KIND[program.srcB], jnp.int32)
+    p_dec = jnp.asarray(profile.p_dec, jnp.float32)
+    p_act = jnp.asarray(profile.p_act, jnp.float32)
+    e_src = jnp.asarray(profile.e_src, jnp.float32)
+
+    kern = build_sweep_kernel(
+        rows=rows, cols=cols, mem_size=M, n_instrs=T, k_steps=K,
+        max_steps=max_steps,
+        p_idle=float(np.asarray(profile.p_idle)),
+        e_sw_op=float(np.asarray(profile.e_sw_op)),
+        e_sw_mux=float(np.asarray(profile.e_sw_mux)),
+        mulzero=float(np.asarray(profile.mulzero)))
+
+    def _chunk_call(Bp, start, hw_i, hw_f, mem, regs, rout, pc, done,
+                    t_cc, e_acc, prev):
+        grid = (Bp // blk_b,)
+        bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+        lane1 = pl.BlockSpec((blk_b,), lambda i: (i,))
+        lane = lambda *rest: pl.BlockSpec((blk_b,) + rest,
+                                          lambda i: (i,) + (0,) * len(rest))
+        state_specs = [lane(M), lane(4, P), lane(P), lane1, lane1, lane1,
+                       lane1, lane1]
+        in_specs = ([bcast((1,))] + [bcast((T, P))] * 10
+                    + [bcast((isa.N_OPS,))] * 2 + [bcast((isa.N_SRC_KINDS,))]
+                    + [lane(len(HW_INT_FIELDS)), lane1] + state_specs)
+        out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in
+                     (mem, regs, rout, pc, done, t_cc, e_acc, prev)]
+        return pl.pallas_call(
+            kern, grid=grid, in_specs=in_specs, out_specs=state_specs,
+            out_shape=out_shape, interpret=interpret,
+        )(start, ops_t, dest_t, srcA_t, srcB_t, imm_t, isld_t, isst_t,
+          wr_t, kA_t, kB_t, p_dec, p_act, e_src, hw_i, hw_f,
+          mem, regs, rout, pc, done, t_cc, e_acc, prev)
+
+    @jax.jit
+    def fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
+        mem0 = jnp.asarray(mem_init, jnp.int32)
+        B = mem0.shape[0]
+        Bp = -(-B // blk_b) * blk_b
+        pad = Bp - B
+
+        def padb(x, fill=0):
+            widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+            return jnp.pad(x, widths, constant_values=fill)
+
+        hw_i = padb(jnp.stack(
+            [jnp.asarray(getattr(hw, f)).astype(jnp.int32).reshape(B)
+             for f in HW_INT_FIELDS], axis=1), fill=1)
+        hw_f = padb(jnp.asarray(hw.smul_power_scale,
+                                jnp.float32).reshape(B), fill=1)
+        state = (
+            padb(mem0),                                       # mem
+            jnp.zeros((Bp, 4, P), jnp.int32),                 # regs
+            jnp.zeros((Bp, P), jnp.int32),                    # rout
+            jnp.zeros((Bp,), jnp.int32),                      # pc
+            padb(jnp.zeros((B,), jnp.int32), fill=1),         # done (pad=1)
+            jnp.zeros((Bp,), jnp.int32),                      # t_cc
+            jnp.zeros((Bp,), jnp.float32),                    # e_acc
+            jnp.full((Bp,), -1, jnp.int32),                   # prev_pc
+        )
+
+        def cond(c):
+            t0, st = c
+            return (t0 < max_steps) & (jnp.min(st[4]) == 0)
+
+        def body(c):
+            t0, st = c
+            start = jnp.full((1,), t0, jnp.int32)
+            st = _chunk_call(Bp, start, hw_i, hw_f, *st)
+            return (t0 + K, tuple(st))
+
+        _, st = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
+        mem, _, _, _, _, t_cc, e_acc, _ = st
+        lat_cc = t_cc[:B]
+        e_uwcc = e_acc[:B]
+        # clock period comes from the characterization profile, exactly as
+        # in the XLA backend and the trace estimator (hw.t_clk_ns is not
+        # consulted by either)
+        t_clk = jnp.float32(np.asarray(profile.t_clk_ns))
+        energy_pj = e_uwcc * t_clk * 1e-3
+        power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
+        weights = (jnp.arange(M, dtype=jnp.int32) | 1)[None, :]
+        checksum = (mem[:B] * weights).sum(axis=1).astype(jnp.int32)
+        return SweepResult(lat_cc, energy_pj, power_mw, checksum)
+
+    return fn

@@ -1,0 +1,1 @@
+# Makes tests/ a package so relative imports (ref_interp, shims) resolve.

@@ -1,10 +1,23 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count override here --
 smoke tests and benches must see the 1 real CPU device; only
 launch/dryrun.py fakes 512 devices (and only in its own process)."""
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+try:                                   # pragma: no cover
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Hermetic containers lack hypothesis; install the deterministic
+    # sampling shim so the property-test files still collect and run.
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_shim",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_shim.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    _mod.register()
 
 import numpy as np
 import pytest

@@ -1,0 +1,194 @@
+"""Backend equivalence of the DSE sweep engine.
+
+Three independent implementations of simulate+estimate must agree:
+  * the XLA scan path (core/dse.py, vmapped core/cgra.py step),
+  * the fused multi-step Pallas engine (kernels/cgra_sweep, interpret
+    mode on CPU CI),
+  * the trace-based numpy estimator (core/estimator.py case (vi)).
+Latency and checksum must be bit-identical; energy equal to float32
+accumulation order.  Early-exit chunking must be invisible in results.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse, estimator
+from repro.core.cgra import run_program
+from repro.core.hwconfig import (TOPOLOGIES, HwConfig, baseline,
+                                 stack_configs)
+from repro.core.isa import asm
+from repro.core.program import ProgramBuilder
+
+MEM = 256
+MAX_STEPS = 48
+
+
+def _random_program(seed, n_instr=None):
+    """Random straightline program over the full ALU + memory ISA."""
+    rng = np.random.default_rng(seed)
+    n_instr = n_instr or int(rng.integers(3, 10))
+    alu = ["SADD", "SSUB", "SMUL", "SLL", "SRL", "SRA", "LAND", "LOR",
+           "LXOR", "SLT", "MV"]
+    srcs = ["ZERO", "IMM", "R0", "R1", "R2", "R3", "ROUT",
+            "RCL", "RCR", "RCT", "RCB"]
+    dests = ["R0", "R1", "R2", "R3", "ROUT"]
+    pb = ProgramBuilder(16, f"rand{seed}")
+    for _ in range(n_instr):
+        slots = {}
+        for p in range(16):
+            if rng.random() < 0.4:
+                continue
+            kind = rng.choice(["alu", "alu", "lwd", "swd", "lwi", "swi"])
+            imm = int(rng.integers(-2**31, 2**31 - 1))
+            addr = int(rng.integers(0, MEM))
+            d = str(rng.choice(dests))
+            a = str(rng.choice(srcs))
+            b = str(rng.choice(srcs))
+            if kind == "alu":
+                slots[p] = asm(str(rng.choice(alu)), d, a, b, imm)
+            elif kind == "lwd":
+                slots[p] = asm("LWD", d, imm=addr)
+            elif kind == "swd":
+                slots[p] = asm("SWD", a=a, imm=addr)
+            elif kind == "lwi":
+                slots[p] = asm("LWI", d, a, imm=addr)
+            else:
+                slots[p] = asm("SWI", a=a, b=b, imm=addr)
+        pb.instr(slots)
+    pb.exit()
+    mem = rng.integers(-2**31, 2**31 - 1, MEM).astype(np.int32)
+    return pb.build(), mem
+
+
+def _loop_program(iters=10):
+    """Counter loop with a store per iteration (exercises branches, the
+    contention model and store arbitration across many steps)."""
+    pb = ProgramBuilder(16, "loop")
+    pb.instr({0: asm("MV", "R1", "IMM", imm=iters)})
+    top = pb.instr({0: asm("SADD", "R0", "R0", "IMM", imm=1),
+                    3: asm("SADD", "R0", "R0", "IMM", imm=3)})
+    pb.instr({0: asm("SWI", a="R0", b="R0"),
+              3: asm("SWI", a="R0", b="R0"),
+              7: asm("SMUL", "R2", "RCL", "IMM", imm=5)})
+    pb.instr({0: asm("BLT", a="R0", b="R1", imm=top)})
+    pb.exit()
+    return pb.build(), np.zeros(MEM, np.int32)
+
+
+def _hw_batch():
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    hws.append(HwConfig(bus=1, interleaved=1, n_banks=2, dma_per_pe=1,
+                        t_mem=4, smul_lat=2))
+    # t_clk_ns differing from the profile's: energy conversion must come
+    # from the characterization profile on every backend
+    hws.append(HwConfig(t_clk_ns=5.0))
+    return hws
+
+
+def _run_backend(program, mem_images, hws, backend, **kw):
+    fn = dse.make_sweep_fn(program, kw.pop("profile"), mem_size=MEM,
+                           max_steps=MAX_STEPS, backend=backend, **kw)
+    B = len(hws)
+    mems = jnp.asarray(np.broadcast_to(
+        mem_images, (B, mem_images.size)).copy())
+    return jax.tree.map(np.asarray, fn(mems, stack_configs(hws)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pallas_matches_xla_random_programs(seed, profile):
+    program, mem = _random_program(seed)
+    hws = _hw_batch()
+    rx = _run_backend(program, mem, hws, "xla", profile=profile)
+    rp = _run_backend(program, mem, hws, "pallas", profile=profile,
+                      blk_b=4, interpret=True)
+    np.testing.assert_array_equal(rx.latency_cc, rp.latency_cc)
+    np.testing.assert_array_equal(rx.checksum, rp.checksum)
+    np.testing.assert_allclose(rx.energy_pj, rp.energy_pj, rtol=1e-5)
+    np.testing.assert_allclose(rx.power_mw, rp.power_mw, rtol=1e-5)
+
+
+def test_pallas_matches_xla_loop_kernel(profile):
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    rx = _run_backend(program, mem, hws, "xla", profile=profile)
+    rp = _run_backend(program, mem, hws, "pallas", profile=profile,
+                      blk_b=4, interpret=True)
+    np.testing.assert_array_equal(rx.latency_cc, rp.latency_cc)
+    np.testing.assert_array_equal(rx.checksum, rp.checksum)
+    np.testing.assert_allclose(rx.energy_pj, rp.energy_pj, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("xla", {}),
+    ("pallas", dict(blk_b=4, interpret=True)),
+])
+def test_backends_match_trace_estimator(backend, kw, profile):
+    """Both fused backends == the independent trace-based estimator."""
+    program, mem = _random_program(7)
+    final, trace = run_program(program, mem, max_steps=MAX_STEPS,
+                               mem_size=MEM)
+    ref = estimator.estimate(program, trace, profile, baseline(), "vi",
+                             mem_size=MEM)
+    got = _run_backend(program, mem, [baseline()], backend,
+                       profile=profile, **kw)
+    assert int(got.latency_cc[0]) == ref.latency_cc
+    np.testing.assert_allclose(float(got.energy_pj[0]), ref.energy_pj,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [None, 5, 8, MAX_STEPS, 4096])
+def test_xla_chunking_invisible_in_results(chunk, profile):
+    """Early-exit chunking (any chunk size, divisor or not) must return
+    results identical to the full-length scan."""
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    ref = _run_backend(program, mem, hws, "xla", profile=profile,
+                       chunk_steps=None)
+    got = _run_backend(program, mem, hws, "xla", profile=profile,
+                       chunk_steps=chunk)
+    np.testing.assert_array_equal(ref.latency_cc, got.latency_cc)
+    np.testing.assert_array_equal(ref.checksum, got.checksum)
+    np.testing.assert_array_equal(ref.energy_pj, got.energy_pj)
+
+
+@pytest.mark.parametrize("chunk", [5, 16, MAX_STEPS])
+def test_pallas_chunking_invisible_in_results(chunk, profile):
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    ref = _run_backend(program, mem, hws, "xla", profile=profile,
+                       chunk_steps=None)
+    got = _run_backend(program, mem, hws, "pallas", profile=profile,
+                       chunk_steps=chunk, blk_b=4, interpret=True)
+    np.testing.assert_array_equal(ref.latency_cc, got.latency_cc)
+    np.testing.assert_array_equal(ref.checksum, got.checksum)
+    np.testing.assert_allclose(ref.energy_pj, got.energy_pj, rtol=1e-5)
+
+
+def test_pallas_batch_padding(profile):
+    """B not a multiple of blk_b: padded lanes must not perturb results."""
+    program, mem = _random_program(11)
+    hws = _hw_batch()[:5]                      # B=5, blk_b=4 -> pad 3
+    rx = _run_backend(program, mem, hws, "xla", profile=profile)
+    rp = _run_backend(program, mem, hws, "pallas", profile=profile,
+                      blk_b=4, interpret=True)
+    np.testing.assert_array_equal(rx.latency_cc, rp.latency_cc)
+    np.testing.assert_array_equal(rx.checksum, rp.checksum)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sweep_grid_ordering(backend, profile):
+    """sweep() row h*D+d must pair hw h with image d for both backends
+    (and the index-broadcast grid must not reorder anything)."""
+    program, mem = _random_program(3)
+    mem2 = mem.copy()
+    mem2[:64] = 9999
+    hws = [baseline(), HwConfig(smul_lat=1, smul_power_scale=3.0)]
+    res = dse.sweep(program, profile, hws, np.stack([mem, mem2]),
+                    mem_size=MEM, max_steps=MAX_STEPS, backend=backend,
+                    interpret=True if backend == "pallas" else None)
+    chk = np.asarray(res.checksum).reshape(2, 2)
+    # same image -> same functional result regardless of hw config
+    np.testing.assert_array_equal(chk[0], chk[1])
+    # different images -> different checksums
+    assert (chk[:, 0] != chk[:, 1]).all()
