@@ -2,7 +2,8 @@
 second through the fused simulate+estimate sweep.
 
 Three comparisons, all machine-readable in BENCH_sim_throughput.json so
-the perf trajectory is trackable across PRs:
+the perf trajectory is trackable across PRs (schema: bench_schema.json,
+validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
   * sweep backends: XLA scan vs the fused multi-step Pallas engine
     (kernels/cgra_sweep) across batch sizes.  Off-TPU the Pallas engine
@@ -10,10 +11,24 @@ the perf trajectory is trackable across PRs:
     JSON records which mode ran;
   * the estimator's memory-contention scheduler: seed S x P Python loop
     vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16).
+
+Steps/sec is *true* steps: ``SweepResult.steps_executed`` counts the
+instructions each design point actually ran (early-exiting kernels stop
+well short of ``max_steps``), so the JSON reports what the engine did,
+not the nominal budget.  Both are recorded per row.
+
+``BENCH_SMOKE=1`` (or ``--smoke``) shrinks every dimension -- tiny
+kernel, one small batch, short contention trace -- for the CI
+benchmark-smoke lane: same code paths, same JSON shape, seconds not
+minutes.  Smoke mode writes ``BENCH_sim_throughput.smoke.json``
+(gitignored) so the tracked perf history is never overwritten with
+non-comparable numbers.
 """
 from __future__ import annotations
 
 import json
+import os
+import sys
 from pathlib import Path
 
 import jax
@@ -28,28 +43,43 @@ from repro.core.hwconfig import TOPOLOGIES, HwConfig, stack_configs
 
 from .common import Report, timeit
 
-JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim_throughput.json"
+SMOKE = (os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+         or "--smoke" in sys.argv[1:])
+# Smoke numbers are not comparable to real runs; keep them out of the
+# tracked perf-history file (gitignored .smoke.json instead).
+JSON_PATH = Path(__file__).resolve().parents[1] / (
+    "BENCH_sim_throughput.smoke.json" if SMOKE
+    else "BENCH_sim_throughput.json")
+BATCH_SIZES = (4,) if SMOKE else (8, 64)
+MEM_BENCH_STEPS = 128 if SMOKE else 2048
 
-BATCH_SIZES = (8, 64)
+
+def _kernel():
+    return mibench.bitcnt(n_words=16) if SMOKE else mibench.sha_mix()
 
 
 def _bench_backends(rep: Report, rows: list) -> None:
     prof = default_profile()
-    k = mibench.sha_mix()
+    k = _kernel()
     hws = [mk() for mk in TOPOLOGIES.values()]
 
     def single():
         final, trace = k.run()
         estimate(k.program, trace, prof, TOPOLOGIES["baseline"](), "vi")
+        return trace
 
     def record(row: dict) -> None:
         rows.append(row)
         rep.add(**{k_: v for k_, v in row.items() if k_ != "backend"})
 
-    t_single = timeit(single, repeats=3, warmup=1)
+    # the warmup run doubles as the step-count probe (no extra execution)
+    steps_single = int(np.asarray(single().valid).sum())
+    t_single = timeit(single, repeats=3, warmup=0)
     record(dict(path="single_trace", backend="trace", B=1,
                 seconds_per_batch=t_single, points_per_s=1.0 / t_single,
-                steps_per_s=k.max_steps / t_single, speedup_vs_single=1.0))
+                steps_per_s=steps_single / t_single,
+                steps_executed=steps_single, steps_nominal=k.max_steps,
+                speedup_vs_single=1.0))
 
     interpret = jax.default_backend() != "tpu"
     for B in BATCH_SIZES:
@@ -64,18 +94,25 @@ def _bench_backends(rep: Report, rows: list) -> None:
             def run_batch():
                 jax.block_until_ready(fn(mems, hw_b))
 
-            t = timeit(run_batch, repeats=3, warmup=1)
+            # compile+warm once and read the true executed instructions
+            # (summed over the batch -- what steps/sec means for an
+            # early-exiting sweep) off that same run
+            res = jax.block_until_ready(fn(mems, hw_b))
+            steps_true = int(np.asarray(res.steps_executed).sum())
+            t = timeit(run_batch, repeats=3, warmup=0)
             label = backend + ("_interpret" if backend == "pallas"
                                and interpret else "")
             record(dict(path=f"{label}_batch_{B}", backend=label, B=B,
                         seconds_per_batch=t, points_per_s=B / t,
-                        steps_per_s=B * k.max_steps / t,
+                        steps_per_s=steps_true / t,
+                        steps_executed=steps_true,
+                        steps_nominal=B * k.max_steps,
                         speedup_vs_single=(t_single * B) / t))
 
 
 def _bench_mem_completion(rep: Report) -> dict:
     """Seed S x P double loop vs the vectorized greedy scheduler."""
-    S, P = 2048, 16
+    S, P = MEM_BENCH_STEPS, 16
     rng = np.random.default_rng(0)
     is_mem = rng.random((S, P)) < 0.5
     addr = rng.integers(0, 4096, (S, P))
@@ -101,11 +138,12 @@ def run() -> Report:
         benchmark="sim_throughput",
         jax_backend=jax.default_backend(),
         pallas_interpret=jax.default_backend() != "tpu",
+        smoke=SMOKE,
         sweep=rows,
         mem_completion=mem_rec,
     )
     JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"[bench] wrote {JSON_PATH}")
+    print(f"[bench] wrote {JSON_PATH}" + (" (smoke mode)" if SMOKE else ""))
     return rep
 
 

@@ -1,0 +1,102 @@
+"""Validate a benchmark JSON artifact against its checked-in schema.
+
+  PYTHONPATH=src python -m benchmarks.validate_bench BENCH_sim_throughput.json
+
+Exits non-zero with a per-violation report on mismatch, so CI's
+benchmark-smoke lane fails when a code change silently drops or retypes a
+field other tooling depends on.  Uses ``jsonschema`` when installed;
+otherwise a built-in validator covering exactly the subset of JSON Schema
+the checked-in schema uses (type / required / properties / items /
+minItems / enum / minimum / exclusiveMinimum).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+SCHEMA_PATH = Path(__file__).resolve().parent / "bench_schema.json"
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "boolean": bool,
+    "integer": int,
+    "number": (int, float),
+}
+
+
+def _check(instance, schema: dict, path: str, errors: List[str]) -> None:
+    """Minimal JSON-Schema subset validator (see module docstring)."""
+    t = schema.get("type")
+    if t is not None:
+        py = _TYPES[t]
+        ok = isinstance(instance, py)
+        # bool is an int subclass in Python; JSON draws the line
+        if ok and t in ("integer", "number") and isinstance(instance, bool):
+            ok = False
+        if not ok:
+            errors.append(f"{path}: expected {t}, got "
+                          f"{type(instance).__name__}")
+            return
+    if "enum" in schema and instance not in schema["enum"]:
+        errors.append(f"{path}: {instance!r} not in {schema['enum']}")
+    if isinstance(instance, (int, float)) and not isinstance(instance, bool):
+        if "minimum" in schema and instance < schema["minimum"]:
+            errors.append(f"{path}: {instance} < minimum "
+                          f"{schema['minimum']}")
+        if "exclusiveMinimum" in schema and \
+                instance <= schema["exclusiveMinimum"]:
+            errors.append(f"{path}: {instance} <= exclusiveMinimum "
+                          f"{schema['exclusiveMinimum']}")
+    if isinstance(instance, dict):
+        for req in schema.get("required", ()):
+            if req not in instance:
+                errors.append(f"{path}: missing required key {req!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in instance:
+                _check(instance[key], sub, f"{path}.{key}", errors)
+    if isinstance(instance, list):
+        if "minItems" in schema and len(instance) < schema["minItems"]:
+            errors.append(f"{path}: {len(instance)} items < minItems "
+                          f"{schema['minItems']}")
+        items = schema.get("items")
+        if items:
+            for i, el in enumerate(instance):
+                _check(el, items, f"{path}[{i}]", errors)
+
+
+def validate(payload: dict, schema: dict) -> List[str]:
+    """Return a list of violations (empty == valid)."""
+    try:
+        import jsonschema
+    except ImportError:
+        errors: List[str] = []
+        _check(payload, schema, "$", errors)
+        return errors
+    v = jsonschema.Draft7Validator(schema)
+    return [f"$.{'.'.join(str(p) for p in e.absolute_path)}: {e.message}"
+            for e in v.iter_errors(payload)]
+
+
+def main(argv) -> int:
+    if len(argv) != 1:
+        print("usage: python -m benchmarks.validate_bench <bench.json>")
+        return 2
+    target = Path(argv[0])
+    payload = json.loads(target.read_text())
+    schema = json.loads(SCHEMA_PATH.read_text())
+    errors = validate(payload, schema)
+    if errors:
+        print(f"[validate_bench] {target}: {len(errors)} violation(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"[validate_bench] {target}: OK against {SCHEMA_PATH.name}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

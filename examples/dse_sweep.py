@@ -41,9 +41,13 @@ res = dse.sweep(kernel.program, profile, hws, mems, mesh=mesh,
                 max_steps=kernel.max_steps)
 lat = np.asarray(res.latency_cc).reshape(len(hws), len(mems))
 en = np.asarray(res.energy_pj).reshape(len(hws), len(mems))
+steps = np.asarray(res.steps_executed)
 dt = time.time() - t0
 print(f"swept {len(hws)}x{len(mems)} = {lat.size} design points in "
       f"{dt:.1f}s on {len(jax.devices())} device(s)")
+print(f"true executed instructions: {steps.sum()} "
+      f"({steps.sum() / dt:.0f} steps/s; nominal budget was "
+      f"{lat.size * kernel.max_steps})")
 
 best = np.unravel_index(np.argmin(en.mean(1)), (len(hws),))[0]
 worst = np.unravel_index(np.argmax(en.mean(1)), (len(hws),))[0]

@@ -30,7 +30,9 @@ import numpy as np
 
 from . import isa
 from .hwconfig import HwConfig
-from .memory import alu_latency_table, mem_completion_times
+from .memory import (DEFAULT_MAX_BANKS, alu_latency_table,
+                     mem_completion_times, scoreboard_bound,
+                     validate_bank_bound)
 from .program import Program
 
 
@@ -141,8 +143,13 @@ def _dedup_stores(is_store, addr):
     return jnp.zeros_like(is_store).at[order].set(landed_s)
 
 
-def make_step(program: Program, rows: int, cols: int, mem_size: int):
-    """Build the single-instruction transition function for `program`."""
+def make_step(program: Program, rows: int, cols: int, mem_size: int,
+              max_banks: int = DEFAULT_MAX_BANKS):
+    """Build the single-instruction transition function for `program`.
+
+    max_banks: static bank-scoreboard bound for the contention model; must
+    cover every n_banks the step will be run with (config-derived by the
+    sweep drivers, see memory.scoreboard_bound)."""
     P = program.n_pes
     assert P == rows * cols
     nbr = {k: jnp.asarray(v) for k, v in
@@ -197,7 +204,8 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int):
         # ---- timing (the "true" hardware timing; detailed sim & case-iii
         # estimator share this model, see memory.py docstring) --------------
         is_mem = is_load | is_store
-        mem_done = mem_completion_times(is_mem, addr, hw, mem_size, cols)
+        mem_done = mem_completion_times(is_mem, addr, hw, mem_size, cols,
+                                        max_banks=max_banks)
         alu_lat = alu_latency_table(hw)[op_row]
         busy = jnp.where(is_mem, mem_done, alu_lat).astype(jnp.int32)
         lat = jnp.max(busy).astype(jnp.int32)
@@ -234,7 +242,7 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int):
 
 def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
                 mem_size: int = 4096, max_steps: int = 4096,
-                record: bool = True):
+                record: bool = True, max_banks: int = DEFAULT_MAX_BANKS):
     """Returns jitted ``run(mem_init, hw) -> (final_state, trace)``.
 
     ``trace`` is a StepRecord with a leading (max_steps,) axis, masked by
@@ -242,10 +250,10 @@ def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
     vmap over ``mem_init`` for data batches and over ``hw`` (stacked
     HwConfig) for hardware sweeps.
     """
-    step = make_step(program, rows, cols, mem_size)
+    step = make_step(program, rows, cols, mem_size, max_banks=max_banks)
 
     @jax.jit
-    def run(mem_init: jnp.ndarray, hw: HwConfig):
+    def _run(mem_init: jnp.ndarray, hw: HwConfig):
         def body(state, _):
             new_state, rec = step(state, hw)
             return new_state, (rec if record else 0)
@@ -253,13 +261,21 @@ def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
         final, trace = jax.lax.scan(body, state0, None, length=max_steps)
         return final, trace
 
+    def run(mem_init: jnp.ndarray, hw: HwConfig):
+        validate_bank_bound(hw.n_banks, max_banks, where="cgra.make_runner")
+        return _run(mem_init, hw)
+
     return run
 
 
 def run_program(program: Program, mem_init, hw: Optional[HwConfig] = None,
                 **kw):
-    """One-shot convenience wrapper (compiles per call)."""
+    """One-shot convenience wrapper (compiles per call).  The bank
+    scoreboard bound is derived from the concrete config, so >16-bank
+    topologies just work here."""
     from .hwconfig import baseline
     hw = hw or baseline()
+    kw.setdefault("max_banks", scoreboard_bound(
+        max(int(np.asarray(hw.n_banks)), DEFAULT_MAX_BANKS)))
     runner = make_runner(program, **kw)
     return runner(jnp.asarray(mem_init, jnp.int32), hw)

@@ -11,8 +11,10 @@ mesh-sharded computation:
     (estimate_vi_jnp) so the full simulate->estimate path stays inside one
     jitted program -- no host round-trip per design point;
   * sweep() shards the flattened (hw x data) grid over every device of the
-    mesh with pjit: on the production pod this is a 512-way data-parallel
-    sweep, the deployable version of the paper's tool.
+    mesh -- pjit for the XLA scan path, shard_map for the fused Pallas
+    engine (each device runs its own VMEM-resident sweep over its shard):
+    on the production pod this is a 512-way data-parallel sweep, the
+    deployable version of the paper's tool.
 
 Different *mappings* (programs) have different shapes and are therefore a
 python-level loop around the sharded sweep.
@@ -30,15 +32,39 @@ from . import isa
 from .cgra import make_step, init_state
 from .characterization import Profile
 from .hwconfig import HwConfig, stack_configs
-from .memory import mem_completion_times
+from .memory import (DEFAULT_MAX_BANKS, scoreboard_bound,
+                     validate_bank_bound)
 from .program import Program
 
 
+def _shard_map(f, mesh, *, in_specs, out_specs):
+    """Version-portable shard_map with replication checking off (required
+    around pallas_call).  jax >= 0.5 exports a stable ``jax.shard_map``
+    whose mesh is keyword-only and whose flag is ``check_vma``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map`` with positional mesh and
+    ``check_rep``."""
+    try:
+        from jax import shard_map as sm              # stable, jax >= 0.5
+        kwargs = {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        kwargs = {"check_rep": False}
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)
+    except TypeError:
+        # intermediate releases: stable export, pre-rename flag
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 class SweepResult(NamedTuple):
-    latency_cc: jnp.ndarray   # (B,) int32
-    energy_pj: jnp.ndarray    # (B,) float32
-    power_mw: jnp.ndarray     # (B,) float32
-    checksum: jnp.ndarray     # (B,) int32  (output-memory hash for validity)
+    latency_cc: jnp.ndarray      # (B,) int32
+    energy_pj: jnp.ndarray       # (B,) float32
+    power_mw: jnp.ndarray        # (B,) float32
+    checksum: jnp.ndarray        # (B,) int32 (output-memory hash, validity)
+    steps_executed: jnp.ndarray  # (B,) int32 true executed instructions
+    # (not the max_steps nominal -- early-exiting kernels report what ran)
 
 
 def _profile_tables(profile: Profile):
@@ -59,7 +85,9 @@ def _profile_tables(profile: Profile):
 def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
                   cols: int = 4, mem_size: int = 4096, max_steps: int = 2048,
                   backend: str = "xla", chunk_steps: Optional[int] = 64,
-                  blk_b: int = 32, interpret: Optional[bool] = None):
+                  blk_b: int = 32, interpret: Optional[bool] = None,
+                  max_banks: Optional[int] = None,
+                  validate: bool = True):
     """Build ``fn(mem_init (B,M), hw batched (B,)) -> SweepResult`` where the
     case-(vi) estimate is fused into the simulation scan (single pass, no
     trace materialization -- O(1) memory per design point).
@@ -72,24 +100,34 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
         one HBM read of the program tables per batch tile.  ``interpret``
         (default: auto, True off-TPU) runs it through the Pallas
         interpreter so results are testable everywhere.
-    Both backends produce bit-identical latency_cc / checksum and energy
-    equal up to float32 accumulation order.
+    Both backends produce bit-identical latency_cc / checksum /
+    steps_executed and energy equal up to float32 accumulation order.
 
     chunk_steps: issue the scan in K-step chunks and stop early once every
     batch lane reports done (EXIT reached) -- short kernels stop paying
     for ``max_steps``.  ``None`` disables chunking (single full-length
     scan); results are identical either way.
+
+    max_banks: static bank-scoreboard bound of the contention model;
+    ``None`` keeps the 16-slot default.  Configs with more banks than the
+    bound hard-assert at call time -- eagerly when concrete, via a staged
+    runtime callback when the caller jits the fn -- instead of silently
+    aliasing.  ``sweep()`` derives the bound from its configs (and passes
+    ``validate=False``, since its configs are pre-checked by
+    construction), so prefer it for exotic topologies.
     """
+    if max_banks is None:
+        max_banks = DEFAULT_MAX_BANKS
     if backend == "pallas":
         from ..kernels.cgra_sweep.ops import make_pallas_sweep_fn
         return make_pallas_sweep_fn(
             program, profile, rows=rows, cols=cols, mem_size=mem_size,
             max_steps=max_steps, chunk_steps=chunk_steps, blk_b=blk_b,
-            interpret=interpret)
+            interpret=interpret, max_banks=max_banks, validate=validate)
     if backend != "xla":
         raise ValueError(f"unknown sweep backend: {backend!r}")
 
-    step = make_step(program, rows, cols, mem_size)
+    step = make_step(program, rows, cols, mem_size, max_banks=max_banks)
     P = program.n_pes
     tbl = _profile_tables(profile)
     ops_t = jnp.asarray(program.ops)
@@ -100,10 +138,10 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
 
     def one(mem_init, hw: HwConfig):
         state0 = init_state(mem_init, P)
-        carry0 = (state0, jnp.float32(0.0), jnp.int32(-1))
+        carry0 = (state0, jnp.float32(0.0), jnp.int32(-1), jnp.int32(0))
 
         def body(carry, t):
-            state, e_acc, prev_pc = carry
+            state, e_acc, prev_pc, n_exec = carry
             pc = state.pc
             live = ~state.done & (t < max_steps)
             new_state, rec = step(state, hw, live=live)
@@ -133,7 +171,8 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
                       * tbl["e_sw_mux"]).sum()
             e_acc = e_acc + jnp.where(live, e_step, 0.0)
             new_prev = jnp.where(live, pc, prev_pc)
-            return (new_state, e_acc, new_prev), None
+            n_exec = n_exec + live.astype(jnp.int32)
+            return (new_state, e_acc, new_prev, n_exec), None
 
         if chunk_steps is None or chunk_steps >= max_steps:
             carry, _ = jax.lax.scan(
@@ -142,7 +181,7 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
             K = max(1, chunk_steps)
 
             def chunk_cond(c):
-                t0, (state, _, _) = c
+                t0, (state, _, _, _) = c
                 return (t0 < max_steps) & ~state.done
 
             def chunk_body(c):
@@ -153,15 +192,24 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
 
             _, carry = jax.lax.while_loop(chunk_cond, chunk_body,
                                           (jnp.int32(0), carry0))
-        final, e_uwcc, _ = carry
+        final, e_uwcc, _, n_exec = carry
         lat_cc = final.t_cc
         energy_pj = e_uwcc * tbl["t_clk_ns"] * 1e-3
         power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
         checksum = (final.mem * (jnp.arange(mem_size, dtype=jnp.int32) | 1)
                     ).sum().astype(jnp.int32)
-        return SweepResult(lat_cc, energy_pj, power_mw, checksum)
+        return SweepResult(lat_cc, energy_pj, power_mw, checksum, n_exec)
 
-    return jax.vmap(one)
+    vfn = jax.vmap(one)
+    if not validate:
+        return vfn
+
+    def fn(mem_init, hw: HwConfig) -> SweepResult:
+        validate_bank_bound(hw.n_banks, max_banks,
+                            where="dse.make_sweep_fn(backend='xla')")
+        return vfn(mem_init, hw)
+
+    return fn
 
 
 def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
@@ -178,34 +226,78 @@ def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
     jitted program -- the host never materializes the H*D*mem_size tiled
     copy (a 512-config x 64-image sweep used to hold ~8 GB of redundant
     int32 on the host; now it holds the 64 images).
+
+    Mesh sharding works for both backends: the XLA scan path is pjit'ed
+    (GSPMD partitions the vmapped scan) while the Pallas engine runs SPMD
+    under ``shard_map`` -- each device sweeps its shard of the flat grid
+    through its own VMEM-resident engine with an independent early-exit
+    loop.  Results are identical on 1 and N devices; a grid that does not
+    divide the device count is padded with duplicate lanes and sliced back.
+
+    The bank-scoreboard bound of the contention model is derived here from
+    the configs (padded to a power of two); configs beyond the hard
+    ceiling fail with an assertion instead of silently aliasing.
     """
     H, D = len(hw_configs), mem_images.shape[0]
+    # config-derived scoreboard bound (>= the 16-slot default so common
+    # sweeps share compile caches; hard ceiling asserted inside)
+    n_banks_req = max(int(np.asarray(c.n_banks)) for c in hw_configs)
+    max_banks = scoreboard_bound(max(n_banks_req, DEFAULT_MAX_BANKS))
     hw_b = stack_configs(list(hw_configs))
     # broadcast to the full grid
     hw_grid = jax.tree.map(lambda x: jnp.repeat(x, D, axis=0), hw_b)
     images = jnp.asarray(mem_images, jnp.int32)          # (D, M), one copy
     img_idx = jnp.tile(jnp.arange(D, dtype=jnp.int32), H)  # (H*D,)
+    # validate=False: every config was just checked against the derived
+    # bound above, so no runtime guard needs to be staged into the
+    # compiled sweep
     fn = make_sweep_fn(program, profile, max_steps=max_steps,
                        mem_size=mem_size, backend=backend,
                        chunk_steps=chunk_steps, blk_b=blk_b,
-                       interpret=interpret)
+                       interpret=interpret, max_banks=max_banks,
+                       validate=False)
 
     def grid_fn(idx, hw):
         return fn(jnp.take(images, idx, axis=0), hw)
 
     if mesh is None:
         return jax.jit(grid_fn)(img_idx, hw_grid)
-    if backend != "xla":
-        raise ValueError("mesh-sharded sweeps require backend='xla'")
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    flat_axes = tuple(mesh.axis_names)
-    sh = NamedSharding(mesh, P(flat_axes))
-    rep = NamedSharding(mesh, P())
-    img_idx = jax.device_put(img_idx, sh)
-    hw_grid = jax.tree.map(
-        lambda x: jax.device_put(x, sh) if x.ndim else x, hw_grid)
-    grid_fn = jax.jit(
-        grid_fn,
-        in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
-        out_shardings=rep)
-    return grid_fn(img_idx, hw_grid)
+
+    from ..parallel.sharding import (batch_sharding, flat_batch_spec,
+                                     pad_batch, replicated_sharding)
+    # Both mesh paths need the flat grid divisible by the device count;
+    # pad with duplicate (harmless, independent) lanes and slice back.
+    B = H * D
+    n_dev = int(mesh.devices.size)
+    Bp = -(-B // n_dev) * n_dev
+    img_idx = pad_batch(img_idx, Bp)
+    hw_grid = jax.tree.map(lambda x: pad_batch(x, Bp), hw_grid)
+
+    if backend == "pallas":
+        # pallas_call does not partition under pjit/GSPMD; run the engine
+        # SPMD with shard_map over the flat (hw x data) axis.  The images
+        # are replicated and gathered per-shard by index, exactly as in
+        # the unsharded grid_fn.
+        from jax.sharding import PartitionSpec
+
+        def shard_fn(imgs, idx, hw):
+            return fn(jnp.take(imgs, idx, axis=0), hw)
+
+        sharded = jax.jit(_shard_map(
+            shard_fn, mesh,
+            in_specs=(PartitionSpec(), flat_batch_spec(mesh),
+                      flat_batch_spec(mesh)),
+            out_specs=flat_batch_spec(mesh)))
+        res = sharded(images, img_idx, hw_grid)
+    else:
+        sh = batch_sharding(mesh)
+        rep = replicated_sharding(mesh)
+        img_idx = jax.device_put(img_idx, sh)
+        # every hw_grid leaf is 1-D by construction (stack_configs + repeat)
+        hw_grid = jax.tree.map(lambda x: jax.device_put(x, sh), hw_grid)
+        grid_fn = jax.jit(
+            grid_fn,
+            in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
+            out_shardings=rep)
+        res = grid_fn(img_idx, hw_grid)
+    return jax.tree.map(lambda x: x[:B], res)

@@ -3,8 +3,9 @@
 One kernel invocation advances a (blk_b,)-lane tile of independent design
 points by K CGRA instructions, with every piece of architectural state --
 registers (blk_b, 4, P), output registers (blk_b, P), per-lane PC / done /
-cycle counter / case-(vi) energy accumulator, and the full (blk_b, M)
-scratchpad memory image -- resident in VMEM for the whole chunk.  The
+cycle counter / executed-step counter / case-(vi) energy accumulator, and
+the full (blk_b, M) scratchpad memory image -- resident in VMEM for the
+whole chunk.  The
 program tables (T, P) are read from HBM once per tile instead of once per
 instruction, which is the entire point: the XLA scan path re-reads state
 every step, while here HBM traffic is amortized K-fold.
@@ -36,7 +37,7 @@ import jax.numpy as jnp
 
 from ...core import isa
 from ...core.hwconfig import BUS_N_TO_M
-from ...core.memory import MAX_BANKS
+from ...core.memory import DEFAULT_MAX_BANKS
 from ..cgra_step.kernel import alu_select
 
 # Column layout of the packed per-lane integer hardware descriptor.
@@ -52,8 +53,13 @@ def _gather_rows(table, pc):
 def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
                        n_instrs: int, k_steps: int, max_steps: int,
                        p_idle: float, e_sw_op: float, e_sw_mux: float,
-                       mulzero: float) -> Callable:
-    """Build the fused K-step kernel body (closed over all static config)."""
+                       mulzero: float,
+                       max_banks: int = DEFAULT_MAX_BANKS) -> Callable:
+    """Build the fused K-step kernel body (closed over all static config).
+
+    max_banks: static bank-scoreboard width, config-derived by the driver
+    (memory.scoreboard_bound); a power of two so the VMEM tile stays
+    aligned."""
     P = rows * cols
     T = n_instrs
     M = mem_size
@@ -108,9 +114,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         pe = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
         dma = jnp.where(dma_per_pe[:, None] > 0, pe, pe % cols)
         blk = is_mem.shape[0]
-        bank_free = jnp.zeros((blk, MAX_BANKS), jnp.int32)
+        bank_free = jnp.zeros((blk, max_banks), jnp.int32)
         dma_free = jnp.zeros((blk, P), jnp.int32)
-        bank_ids = jax.lax.broadcasted_iota(jnp.int32, (1, MAX_BANKS), 1)
+        bank_ids = jax.lax.broadcasted_iota(jnp.int32, (1, max_banks), 1)
         dma_ids = jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
         done_cols = []
         for p in range(P):
@@ -131,9 +137,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
                isld_ref, isst_ref, wr_ref, kA_ref, kB_ref,
                pdec_ref, pact_ref, esrc_ref, hwi_ref, hwf_ref,
                mem_ref, regs_ref, rout_ref, pc_ref, done_ref, tcc_ref,
-               eacc_ref, prev_ref,
+               eacc_ref, prev_ref, nexec_ref,
                omem_ref, oregs_ref, orout_ref, opc_ref, odone_ref,
-               otcc_ref, oeacc_ref, oprev_ref):
+               otcc_ref, oeacc_ref, oprev_ref, onexec_ref):
         start = start_ref[0]
         ops_t = ops_ref[...]
         dest_t = dest_ref[...]
@@ -160,7 +166,7 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         lane_rows = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
 
         def step(k, carry):
-            mem, regs, rout, pc, done, t_cc, e_acc, prev_pc = carry
+            mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec = carry
             budget_ok = start + k < max_steps
             live = (done == 0) & budget_ok                    # (blk,)
             op_row = _gather_rows(ops_t, pc)                  # (blk, P)
@@ -243,12 +249,14 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
                     jnp.where(live & exited, 1, done).astype(jnp.int32),
                     jnp.where(live, t_cc + lat, t_cc),
                     e_acc + jnp.where(live, e_step, 0.0),
-                    jnp.where(live, pc, prev_pc))
+                    jnp.where(live, pc, prev_pc),
+                    jnp.where(live, n_exec + 1, n_exec))
 
         carry = (mem_ref[...], regs_ref[...], rout_ref[...], pc_ref[...],
-                 done_ref[...], tcc_ref[...], eacc_ref[...], prev_ref[...])
+                 done_ref[...], tcc_ref[...], eacc_ref[...], prev_ref[...],
+                 nexec_ref[...])
         carry = jax.lax.fori_loop(0, k_steps, step, carry)
-        mem, regs, rout, pc, done, t_cc, e_acc, prev_pc = carry
+        mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec = carry
         omem_ref[...] = mem
         oregs_ref[...] = regs
         orout_ref[...] = rout
@@ -257,5 +265,6 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         otcc_ref[...] = t_cc
         oeacc_ref[...] = e_acc
         oprev_ref[...] = prev_pc
+        onexec_ref[...] = n_exec
 
     return kernel

@@ -2,8 +2,9 @@
 
 ``make_pallas_sweep_fn`` builds a jitted ``fn(mem_init (B, M), hw batched
 (B,)) -> SweepResult`` with the same contract as the XLA path built by
-``core.dse.make_sweep_fn(backend="xla")``: bit-identical latency and
-checksum, energy equal to float32 accumulation order.
+``core.dse.make_sweep_fn(backend="xla")``: bit-identical latency,
+checksum and executed-step counts, energy equal to float32 accumulation
+order.
 
 Chunked early exit: the host loop issues K-instruction chunks through one
 ``pallas_call`` each and stops as soon as every batch lane reports done,
@@ -26,6 +27,7 @@ from jax.experimental import pallas as pl
 from ...core import isa
 from ...core.characterization import Profile
 from ...core.hwconfig import HwConfig
+from ...core.memory import DEFAULT_MAX_BANKS, validate_bank_bound
 from ...core.program import Program
 from .kernel import HW_INT_FIELDS, build_sweep_kernel
 
@@ -35,7 +37,9 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
                          max_steps: int = 2048,
                          chunk_steps: Optional[int] = 64,
                          blk_b: int = 32,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         max_banks: int = DEFAULT_MAX_BANKS,
+                         validate: bool = True):
     """Build the Pallas-backed sweep function (see module docstring)."""
     from ...core.dse import SweepResult   # function-level: avoids cycle
 
@@ -64,35 +68,35 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
 
     kern = build_sweep_kernel(
         rows=rows, cols=cols, mem_size=M, n_instrs=T, k_steps=K,
-        max_steps=max_steps,
+        max_steps=max_steps, max_banks=max_banks,
         p_idle=float(np.asarray(profile.p_idle)),
         e_sw_op=float(np.asarray(profile.e_sw_op)),
         e_sw_mux=float(np.asarray(profile.e_sw_mux)),
         mulzero=float(np.asarray(profile.mulzero)))
 
     def _chunk_call(Bp, start, hw_i, hw_f, mem, regs, rout, pc, done,
-                    t_cc, e_acc, prev):
+                    t_cc, e_acc, prev, n_exec):
         grid = (Bp // blk_b,)
         bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
         lane1 = pl.BlockSpec((blk_b,), lambda i: (i,))
         lane = lambda *rest: pl.BlockSpec((blk_b,) + rest,
                                           lambda i: (i,) + (0,) * len(rest))
         state_specs = [lane(M), lane(4, P), lane(P), lane1, lane1, lane1,
-                       lane1, lane1]
+                       lane1, lane1, lane1]
         in_specs = ([bcast((1,))] + [bcast((T, P))] * 10
                     + [bcast((isa.N_OPS,))] * 2 + [bcast((isa.N_SRC_KINDS,))]
                     + [lane(len(HW_INT_FIELDS)), lane1] + state_specs)
         out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in
-                     (mem, regs, rout, pc, done, t_cc, e_acc, prev)]
+                     (mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec)]
         return pl.pallas_call(
             kern, grid=grid, in_specs=in_specs, out_specs=state_specs,
             out_shape=out_shape, interpret=interpret,
         )(start, ops_t, dest_t, srcA_t, srcB_t, imm_t, isld_t, isst_t,
           wr_t, kA_t, kB_t, p_dec, p_act, e_src, hw_i, hw_f,
-          mem, regs, rout, pc, done, t_cc, e_acc, prev)
+          mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec)
 
     @jax.jit
-    def fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
+    def _fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
         mem0 = jnp.asarray(mem_init, jnp.int32)
         B = mem0.shape[0]
         Bp = -(-B // blk_b) * blk_b
@@ -116,6 +120,7 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
             jnp.zeros((Bp,), jnp.int32),                      # t_cc
             jnp.zeros((Bp,), jnp.float32),                    # e_acc
             jnp.full((Bp,), -1, jnp.int32),                   # prev_pc
+            jnp.zeros((Bp,), jnp.int32),                      # n_exec
         )
 
         def cond(c):
@@ -129,7 +134,7 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
             return (t0 + K, tuple(st))
 
         _, st = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
-        mem, _, _, _, _, t_cc, e_acc, _ = st
+        mem, _, _, _, _, t_cc, e_acc, _, n_exec = st
         lat_cc = t_cc[:B]
         e_uwcc = e_acc[:B]
         # clock period comes from the characterization profile, exactly as
@@ -140,6 +145,16 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
         power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
         weights = (jnp.arange(M, dtype=jnp.int32) | 1)[None, :]
         checksum = (mem[:B] * weights).sum(axis=1).astype(jnp.int32)
-        return SweepResult(lat_cc, energy_pj, power_mw, checksum)
+        return SweepResult(lat_cc, energy_pj, power_mw, checksum,
+                           n_exec[:B])
+
+    if not validate:
+        # driver (dse.sweep) pre-checked its configs against max_banks
+        return _fn
+
+    def fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
+        validate_bank_bound(hw.n_banks, max_banks,
+                            where="cgra_sweep (backend='pallas')")
+        return _fn(mem_init, hw)
 
     return fn

@@ -20,6 +20,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Axes = Tuple[str, ...]
@@ -187,3 +188,39 @@ def constrain(x, *logical: Optional[str]):
         return x
     spec = logical_to_spec(logical, x.shape, mesh, current_rules())
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Flat-batch sweep sharding: the DSE (hw x data) grid is one long batch
+# axis spread over EVERY axis of whatever mesh the caller brings ((data,),
+# (pod, data, model), ...).  Shared by the pjit'ed XLA sweep path and the
+# shard_map'ed Pallas sweep path (core/dse.py).
+# ---------------------------------------------------------------------------
+
+def flat_batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding a leading batch axis over all mesh axes."""
+    return P(tuple(mesh.axis_names))
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding for a flat batch axis over the whole mesh."""
+    return NamedSharding(mesh, flat_batch_spec(mesh))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated NamedSharding on `mesh`."""
+    return NamedSharding(mesh, P())
+
+
+def pad_batch(x: jnp.ndarray, target: int) -> jnp.ndarray:
+    """Pad a leading batch axis up to `target` rows by repeating row 0.
+
+    Sweep lanes are independent, so duplicated rows are harmless redundant
+    work; callers slice outputs back to the true length.  Used to make an
+    arbitrary design-point count divisible by the device count before
+    shard_map."""
+    pad = target - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])

@@ -1,0 +1,130 @@
+"""The lifted bank-scoreboard bound (regression for the old silent cap).
+
+The seed pinned MAX_BANKS=16: a 32-bank config produced bank indices >= 16
+that gather-clipped / scatter-dropped inside the contention scoreboard --
+wrong latencies with no error.  Now the bound is config-derived (padded to
+a power of two) and configs beyond the hard ceiling, or beyond the bound a
+prebuilt sweep fn was compiled with, fail with a clear assertion.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dse
+from repro.core.cgra import run_program
+from repro.core.estimator import mem_completion_np
+from repro.core.hwconfig import BUS_N_TO_M, HwConfig, stack_configs
+from repro.core.isa import asm
+from repro.core.memory import (HARD_MAX_BANKS, mem_completion_times,
+                               scoreboard_bound)
+from repro.core.program import ProgramBuilder
+
+MEM = 256
+
+
+def _two_store_program():
+    """Stores to addresses 0 and 16: distinct banks iff n_banks > 16
+    (word-interleaved), i.e. exactly what the old 16-slot scoreboard
+    aliased."""
+    pb = ProgramBuilder(16, "banks")
+    pb.instr({0: asm("SWD", a="IMM", imm=0), 1: asm("SWD", a="IMM", imm=16)})
+    pb.exit()
+    return pb.build(), np.zeros(MEM, np.int32)
+
+
+def _hw(n_banks):
+    return HwConfig(bus=BUS_N_TO_M, interleaved=1, n_banks=n_banks,
+                    dma_per_pe=1, t_mem=2)
+
+
+def test_scoreboard_bound_pads_to_power_of_two():
+    assert scoreboard_bound(1) == 1
+    assert scoreboard_bound(16) == 16
+    assert scoreboard_bound(17) == 32
+    assert scoreboard_bound(HARD_MAX_BANKS) == HARD_MAX_BANKS
+    with pytest.raises(AssertionError, match="HARD_MAX_BANKS"):
+        scoreboard_bound(HARD_MAX_BANKS + 1)
+
+
+def test_mem_completion_32_banks_matches_numpy_oracle():
+    """Architectural model with a 32-slot scoreboard == the estimator's
+    numpy scheduler (which sizes its scoreboard from n_banks natively)."""
+    rng = np.random.default_rng(0)
+    S, P = 64, 16
+    is_mem = rng.random((S, P)) < 0.6
+    addr = rng.integers(0, MEM, (S, P)).astype(np.int32)
+    hw = _hw(32)
+    ref = mem_completion_np(is_mem, addr, hw, MEM, 4)
+    for s in range(S):
+        got = mem_completion_times(jnp.asarray(is_mem[s]),
+                                   jnp.asarray(addr[s]), hw, MEM, 4,
+                                   max_banks=32)
+        np.testing.assert_array_equal(np.asarray(got), ref[s])
+
+
+def test_32_bank_config_beats_16_bank_alias():
+    """run_program derives the bound from the config: with 32 interleaved
+    banks the two stores proceed in parallel (latency t_mem + 1 retire),
+    with 16 banks they alias to one bank and serialize."""
+    program, mem = _two_store_program()
+    f32, _ = run_program(program, mem, _hw(32), mem_size=MEM, max_steps=8)
+    f16, _ = run_program(program, mem, _hw(16), mem_size=MEM, max_steps=8)
+    assert int(f32.t_cc) < int(f16.t_cc)
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("xla", {}),
+    ("pallas", dict(interpret=True, blk_b=4)),
+])
+def test_sweep_with_over_16_banks(backend, kw, profile):
+    """dse.sweep derives a 32-slot scoreboard for a 32-bank config; both
+    backends agree and resolve the banks the old cap aliased."""
+    program, mem = _two_store_program()
+    hws = [_hw(32), _hw(16), HwConfig()]
+    res = dse.sweep(program, profile, hws, mem[None, :], mem_size=MEM,
+                    max_steps=8, backend=backend, **kw)
+    lat = np.asarray(res.latency_cc)
+    assert lat[0] < lat[1]                     # 32 banks resolve the alias
+    ref = dse.sweep(program, profile, hws, mem[None, :], mem_size=MEM,
+                    max_steps=8, backend="xla")
+    np.testing.assert_array_equal(lat, np.asarray(ref.latency_cc))
+    np.testing.assert_array_equal(np.asarray(res.checksum),
+                                  np.asarray(ref.checksum))
+
+
+def test_over_limit_config_asserts_clearly(profile):
+    program, mem = _two_store_program()
+    with pytest.raises(AssertionError, match="HARD_MAX_BANKS"):
+        dse.sweep(program, profile, [HwConfig(n_banks=HARD_MAX_BANKS * 2)],
+                  mem[None, :], mem_size=MEM, max_steps=8)
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("xla", {}),
+    ("pallas", dict(interpret=True, blk_b=4)),
+])
+def test_prebuilt_fn_rejects_configs_beyond_its_bound(backend, kw, profile):
+    """A sweep fn compiled with the 16-slot default must hard-assert when
+    handed a 32-bank config (the old code silently returned wrong
+    results)."""
+    program, mem = _two_store_program()
+    fn = dse.make_sweep_fn(program, profile, mem_size=MEM, max_steps=8,
+                           backend=backend, **kw)
+    with pytest.raises(AssertionError, match="scoreboard bound"):
+        fn(jnp.asarray(mem[None, :]), stack_configs([_hw(32)]))
+
+
+def test_jitted_fn_still_fails_loudly_on_over_bound_config(profile):
+    """Wrapping the sweep fn in jax.jit turns the configs into tracers;
+    the guard must fall back to a runtime callback and still fail, not
+    silently alias (regression: the eager-only guard was jit-bypassable)."""
+    import jax
+    program, mem = _two_store_program()
+    fn = jax.jit(dse.make_sweep_fn(program, profile, mem_size=MEM,
+                                   max_steps=8))
+    with pytest.raises(Exception, match="scoreboard bound"):
+        jax.block_until_ready(
+            fn(jnp.asarray(mem[None, :]), stack_configs([_hw(32)])))
+    # and a valid config through the same jitted fn still works
+    res = fn(jnp.asarray(mem[None, :]), stack_configs([_hw(16)]))
+    assert int(np.asarray(res.latency_cc)[0]) > 0

@@ -3,9 +3,11 @@ compile AND *run* on a multi-pod (pod, data, model) mesh.  64 faked host
 devices here: executing collectives spawns one thread per device and the
 CPU rendezvous caps out near ~270; the 512-device production mesh is
 exercised compile-only by the dry-run (launch/dryrun.py)."""
+import os
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 
 def test_dse_sweep_runs_on_512_device_mesh():
@@ -32,11 +34,10 @@ def test_dse_sweep_runs_on_512_device_mesh():
         assert len(set(lat.tolist())) > 1
         print("DSE_MULTIPOD_OK", lat.min(), lat.max())
     """)
+    root = Path(__file__).resolve().parents[1]
     r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                       text=True, cwd="/root/repo",
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root",
-                            "TMPDIR": "/tmp"},
+                       text=True, cwd=str(root),
+                       env=dict(os.environ, PYTHONPATH=str(root / "src")),
                        timeout=1200)
     assert "DSE_MULTIPOD_OK" in r.stdout, (r.stdout[-1500:],
                                            r.stderr[-1500:])

@@ -5,16 +5,23 @@ Three independent implementations of simulate+estimate must agree:
   * the fused multi-step Pallas engine (kernels/cgra_sweep, interpret
     mode on CPU CI),
   * the trace-based numpy estimator (core/estimator.py case (vi)).
-Latency and checksum must be bit-identical; energy equal to float32
-accumulation order.  Early-exit chunking must be invisible in results.
+Latency, checksum and steps_executed must be bit-identical; energy equal
+to float32 accumulation order.  Early-exit chunking and mesh sharding
+(shard_map for pallas, pjit for xla) must be invisible in results.
 """
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
 from repro.core import dse, estimator
-from repro.core.cgra import run_program
+from repro.core.cgra import init_state, make_step, run_program
 from repro.core.hwconfig import (TOPOLOGIES, HwConfig, baseline,
                                  stack_configs)
 from repro.core.isa import asm
@@ -174,6 +181,134 @@ def test_pallas_batch_padding(profile):
                       blk_b=4, interpret=True)
     np.testing.assert_array_equal(rx.latency_cc, rp.latency_cc)
     np.testing.assert_array_equal(rx.checksum, rp.checksum)
+
+
+# ---------------------------------------------------------------------------
+# True step accounting: SweepResult.steps_executed
+# ---------------------------------------------------------------------------
+
+def _steps_oracle(program, mem, hw, max_steps):
+    """Host Python loop over the single-instruction transition: the
+    simplest possible executed-step count, independent of scan/while_loop
+    chunking on either backend."""
+    step = make_step(program, 4, 4, MEM)
+    state = init_state(jnp.asarray(mem, jnp.int32), program.n_pes)
+    n = 0
+    for _ in range(max_steps):
+        if bool(state.done):
+            break
+        state, _ = step(state, hw)
+        n += 1
+    return n
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("xla", {}),
+    ("pallas", dict(blk_b=4, interpret=True)),
+])
+def test_steps_executed_matches_python_loop_oracle(backend, kw, profile):
+    """Early-exiting kernel: steps_executed must be the true executed
+    count, not the max_steps nominal."""
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    got = _run_backend(program, mem, hws, backend, profile=profile, **kw)
+    for i, hw in enumerate(hws):
+        expect = _steps_oracle(program, mem, hw, MAX_STEPS)
+        assert expect < MAX_STEPS          # the kernel really early-exits
+        assert int(got.steps_executed[i]) == expect
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("xla", dict(chunk_steps=None)),
+    ("xla", dict(chunk_steps=5)),
+    ("pallas", dict(chunk_steps=7, blk_b=4, interpret=True)),
+])
+def test_steps_executed_invisible_to_chunking(backend, kw, profile):
+    """Chunk overshoot must not inflate steps_executed: frozen lanes do
+    not count."""
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    ref = _run_backend(program, mem, hws, "xla", profile=profile,
+                       chunk_steps=MAX_STEPS)
+    got = _run_backend(program, mem, hws, backend, profile=profile, **kw)
+    np.testing.assert_array_equal(ref.steps_executed, got.steps_executed)
+
+
+def test_steps_executed_caps_at_max_steps(profile):
+    """A kernel that never EXITs within the budget reports exactly
+    max_steps."""
+    program, mem = _loop_program(iters=10**6)
+    got = _run_backend(program, mem, [baseline()], "xla", profile=profile)
+    assert int(got.steps_executed[0]) == MAX_STEPS
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded sweeps: pallas under shard_map == single-device xla
+# ---------------------------------------------------------------------------
+
+def test_sweep_sharded_pallas_one_device_mesh(profile):
+    """backend='pallas' under a 1-device mesh: the shard_map path must be
+    bit-identical to the unsharded single-device XLA sweep."""
+    program, mem = _loop_program()
+    hws = _hw_batch()
+    mems = np.stack([mem, np.arange(MEM, dtype=np.int32)])
+    mesh = jax.make_mesh((1,), ("data",))
+    rp = dse.sweep(program, profile, hws, mems, mesh=mesh, mem_size=MEM,
+                   max_steps=MAX_STEPS, backend="pallas", interpret=True,
+                   blk_b=4)
+    rx = dse.sweep(program, profile, hws, mems, mem_size=MEM,
+                   max_steps=MAX_STEPS, backend="xla")
+    np.testing.assert_array_equal(np.asarray(rp.latency_cc),
+                                  np.asarray(rx.latency_cc))
+    np.testing.assert_array_equal(np.asarray(rp.checksum),
+                                  np.asarray(rx.checksum))
+    np.testing.assert_array_equal(np.asarray(rp.steps_executed),
+                                  np.asarray(rx.steps_executed))
+    np.testing.assert_allclose(np.asarray(rp.energy_pj),
+                               np.asarray(rx.energy_pj), rtol=1e-5)
+
+
+def test_sweep_sharded_pallas_multi_device():
+    """backend='pallas' under a 1x8 mesh (8 forced host devices, own
+    process) == single-device XLA bit-for-bit, including a design-point
+    count that does not divide the device count (padding path)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.apps import mibench
+        from repro.core import dse
+        from repro.core.characterization import default_profile
+        from repro.core.hwconfig import TOPOLOGIES
+
+        profile = default_profile()
+        k = mibench.bitcnt(n_words=16)
+        hws = [mk() for mk in TOPOLOGIES.values()]      # H=5
+        mems = np.stack([k.mem_init] * 3)               # D=3 -> B=15 (pad)
+        mesh = jax.make_mesh((8,), ("data",))
+        rp = dse.sweep(k.program, profile, hws, mems, mesh=mesh,
+                       max_steps=256, backend="pallas", interpret=True,
+                       blk_b=2)
+        rx = dse.sweep(k.program, profile, hws, mems, max_steps=256,
+                       backend="xla")
+        assert np.array_equal(np.asarray(rp.latency_cc),
+                              np.asarray(rx.latency_cc))
+        assert np.array_equal(np.asarray(rp.checksum),
+                              np.asarray(rx.checksum))
+        assert np.array_equal(np.asarray(rp.steps_executed),
+                              np.asarray(rx.steps_executed))
+        np.testing.assert_allclose(np.asarray(rp.energy_pj),
+                                   np.asarray(rx.energy_pj), rtol=1e-5)
+        assert (np.asarray(rp.steps_executed) < 256).all()
+        print("SHARDED_PALLAS_OK")
+    """)
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, cwd=str(root),
+                       env=dict(os.environ, PYTHONPATH=str(root / "src")),
+                       timeout=1200)
+    assert "SHARDED_PALLAS_OK" in r.stdout, (r.stdout[-1500:],
+                                             r.stderr[-1500:])
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
