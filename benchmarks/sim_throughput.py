@@ -1,7 +1,7 @@
 """The "instantaneous result" claim (paper Section 1): design points per
 second through the fused simulate+estimate sweep.
 
-Three comparisons, all machine-readable in BENCH_sim_throughput.json so
+Four comparisons, all machine-readable in BENCH_sim_throughput.json so
 the perf trajectory is trackable across PRs (schema: bench_schema.json,
 validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
@@ -9,6 +9,11 @@ validated in CI by benchmarks.validate_bench):
     (kernels/cgra_sweep) across batch sizes.  Off-TPU the Pallas engine
     runs in interpret mode -- a correctness proxy, not its speed; the
     JSON records which mode ran;
+  * multi-kernel lane: G different kernels swept as a packed
+    ProgramBatch (one compile) vs the per-program loop (G compiles),
+    with compile seconds reported separately from steady-state true
+    steps/sec -- the recompile-per-program cost the program-as-data
+    refactor removes;
   * the estimator's memory-contention scheduler: seed S x P Python loop
     vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16).
 
@@ -110,6 +115,89 @@ def _bench_backends(rep: Report, rows: list) -> None:
                         speedup_vs_single=(t_single * B) / t))
 
 
+def _multi_kernels():
+    if SMOKE:
+        return [mibench.bitcnt(n_words=16), mibench.crc32(n_words=3)]
+    return [mibench.bitcnt(), mibench.crc32(), mibench.susan_thresh()]
+
+
+def _first_and_steady(run):
+    """(first-call seconds, steady-state median seconds): the first call
+    pays trace+compile, so their difference is the compile cost."""
+    import time as _time
+    t0 = _time.perf_counter()
+    run()
+    first = _time.perf_counter() - t0
+    steady = timeit(run, repeats=3, warmup=0)
+    return first, steady
+
+
+def _bench_multi_kernel(rep: Report) -> dict:
+    """G different kernels: packed ProgramBatch (one compiled executable)
+    vs the per-program python loop (one compile per kernel).  XLA backend
+    -- the compile-amortization story is backend-independent and the
+    interpret-mode Pallas numbers would only measure the interpreter."""
+    prof = default_profile()
+    ks = _multi_kernels()
+    progs = [k.program for k in ks]
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    G, H = len(ks), len(hws)
+    max_steps = max(k.max_steps for k in ks)
+    # diagonal data pairing: each lane runs its kernel's own image
+    mems_g = [jnp.asarray(np.broadcast_to(
+        k.mem_init, (H, k.mem_init.size)).copy()) for k in ks]
+    hw_b = stack_configs(hws)
+
+    # ---- packed: one executable for the whole G x H grid --------------
+    fn = jax.jit(dse.make_sweep_fn(progs, prof, max_steps=max_steps,
+                                   backend="xla"))
+    mems = jnp.concatenate(mems_g)
+    hw_grid = jax.tree.map(lambda x: jnp.tile(x, G), hw_b)
+    gi = jnp.repeat(jnp.arange(G, dtype=jnp.int32), H)
+    run_packed = lambda: jax.block_until_ready(fn(mems, hw_grid, gi))
+    first_p, steady_p = _first_and_steady(run_packed)
+    steps_p = int(np.asarray(fn(mems, hw_grid, gi).steps_executed).sum())
+
+    # ---- per-program loop: what the packed sweep replaces -------------
+    fns = [jax.jit(dse.make_sweep_fn(p, prof, max_steps=max_steps,
+                                     backend="xla"))
+           for p in progs]
+    def run_loop():
+        for f, m in zip(fns, mems_g):
+            jax.block_until_ready(f(m, hw_b))
+    first_l, steady_l = _first_and_steady(run_loop)
+
+    B = G * H
+    rec = dict(
+        G=G, H=H, B=B, backend="xla", max_steps=max_steps,
+        t_max=max(p.n_instrs for p in progs),
+        packed=dict(compile_seconds=max(first_p - steady_p, 0.0),
+                    steady_seconds_per_sweep=steady_p,
+                    points_per_s=B / steady_p,
+                    steps_per_s=steps_p / steady_p,
+                    steps_executed=steps_p),
+        per_program_loop=dict(compile_seconds=max(first_l - steady_l, 0.0),
+                              steady_seconds_per_sweep=steady_l,
+                              points_per_s=B / steady_l,
+                              steps_per_s=steps_p / steady_l,
+                              steps_executed=steps_p),
+    )
+    rec["compile_speedup"] = (rec["per_program_loop"]["compile_seconds"]
+                              / max(rec["packed"]["compile_seconds"], 1e-9))
+    for label in ("packed", "per_program_loop"):
+        r = rec[label]
+        rep.add(path=f"multi_kernel_{label}", B=B,
+                seconds_per_batch=r["steady_seconds_per_sweep"],
+                points_per_s=r["points_per_s"],
+                steps_per_s=r["steps_per_s"],
+                steps_executed=r["steps_executed"],
+                steps_nominal=B * max_steps,
+                speedup_vs_single=(rec["compile_speedup"]
+                                   if label == "packed" else 1.0),
+                compile_seconds=r["compile_seconds"])
+    return rec
+
+
 def _bench_mem_completion(rep: Report) -> dict:
     """Seed S x P double loop vs the vectorized greedy scheduler."""
     S, P = MEM_BENCH_STEPS, 16
@@ -133,6 +221,7 @@ def run() -> Report:
     rep = Report("sim_throughput (design points / second)")
     rows: list = []
     _bench_backends(rep, rows)
+    mk_rec = _bench_multi_kernel(rep)
     mem_rec = _bench_mem_completion(rep)
     payload = dict(
         benchmark="sim_throughput",
@@ -140,6 +229,7 @@ def run() -> Report:
         pallas_interpret=jax.default_backend() != "tpu",
         smoke=SMOKE,
         sweep=rows,
+        multi_kernel=mk_rec,
         mem_completion=mem_rec,
     )
     JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")

@@ -8,10 +8,12 @@ Public API:
   estimate / estimate_all_cases              -- cases (i)-(vi)
   detailed.report                            -- post-synthesis stand-in
   bitstream.encode/decode                    -- deployment encoding
+  pack_programs -> ProgramBatch              -- multi-kernel program axis
   dse                                        -- mesh-sharded design sweeps
 """
 from . import bitstream, detailed, isa
-from .cgra import SimState, StepRecord, init_state, make_runner, run_program
+from .cgra import (SimState, StepRecord, init_state, make_runner,
+                   make_step_fn, make_table_runner, run_program)
 from .characterization import Profile, characterize
 from .estimator import (CASES, Estimate, errors_vs_detailed, estimate,
                         estimate_all_cases)
@@ -19,5 +21,6 @@ from .hwconfig import (TOPOLOGIES, HwConfig, baseline, mod_a_fast_mul,
                        mod_b_n_to_m, mod_c_interleaved, mod_d_dma_per_pe,
                        stack_configs)
 from .physical import DEFAULT_PHYS, PhysicalModel
-from .program import Program, ProgramBuilder, assemble
+from .program import (Program, ProgramBatch, ProgramBuilder, ProgramTables,
+                      assemble, pack_programs, program_tables)
 from .trace import DenseTrace, densify

@@ -10,9 +10,15 @@ its neighbours' values from the previous instruction).
 
 The simulator is a single ``lax.scan`` over a static step bound with
 "done" masking, which makes it jit-able and vmap-able over
-  * data batches (different memory images), and
+  * data batches (different memory images),
   * hardware-configuration batches (HwConfig pytrees with a leading axis),
-the substrate for mesh-sharded design-space sweeps (dse.py).
+  * and *programs*: the transition function built by ``make_step_fn``
+    takes the program tables (``program.ProgramTables``) as a traced
+    operand, so one compiled executable serves every kernel of the same
+    padded shape -- the substrate for the (program x hardware x data)
+    mesh-sharded design-space sweeps (dse.py).  ``make_step`` /
+    ``make_runner`` keep the original single-program API as thin
+    constant-closure wrappers.
 
 Opcode dispatch is branchless: every op's result is computed for all PEs
 (cheap int32 vector ops on the VPU) and the per-PE opcode selects among
@@ -33,7 +39,7 @@ from .hwconfig import HwConfig
 from .memory import (DEFAULT_MAX_BANKS, alu_latency_table,
                      mem_completion_times, scoreboard_bound,
                      validate_bank_bound)
-from .program import Program
+from .program import Program, ProgramTables, program_tables
 
 
 class SimState(NamedTuple):
@@ -143,27 +149,24 @@ def _dedup_stores(is_store, addr):
     return jnp.zeros_like(is_store).at[order].set(landed_s)
 
 
-def make_step(program: Program, rows: int, cols: int, mem_size: int,
-              max_banks: int = DEFAULT_MAX_BANKS):
-    """Build the single-instruction transition function for `program`.
+def make_step_fn(rows: int, cols: int, mem_size: int,
+                 max_banks: int = DEFAULT_MAX_BANKS):
+    """Build the single-instruction transition function with the program
+    as a *runtime operand*: ``step(tables, state, hw, live=None)``.
+
+    ``tables`` is a ``program.ProgramTables`` pytree -- a traced argument,
+    not a closure constant -- so the same compiled step (and everything
+    scanned over it) serves every program of the same padded shape; the
+    PC is clipped to ``tables.n_instrs - 1``, preserving each program's
+    own EXIT/clamp semantics under NOP padding.
 
     max_banks: static bank-scoreboard bound for the contention model; must
     cover every n_banks the step will be run with (config-derived by the
     sweep drivers, see memory.scoreboard_bound)."""
-    P = program.n_pes
-    assert P == rows * cols
     nbr = {k: jnp.asarray(v) for k, v in
            isa.neighbour_index_maps(rows, cols).items()}
-    ops_t = jnp.asarray(program.ops)
-    dest_t = jnp.asarray(program.dest)
-    srcA_t = jnp.asarray(program.srcA)
-    srcB_t = jnp.asarray(program.srcB)
-    imm_t = jnp.asarray(program.imm)
-    is_load_t = jnp.asarray(isa.IS_LOAD)[ops_t]      # (T, P) static masks
-    is_store_t = jnp.asarray(isa.IS_STORE)[ops_t]
-    writes_rout_t = jnp.asarray(isa.WRITES_ROUT)[ops_t]
 
-    def step(state: SimState, hw: HwConfig,
+    def step(tables: ProgramTables, state: SimState, hw: HwConfig,
              live: Optional[jnp.ndarray] = None
              ) -> Tuple[SimState, StepRecord]:
         # `live` lets a caller mask execution beyond ~state.done (e.g. the
@@ -171,15 +174,19 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int,
         # default reproduces the original done-only masking bit-for-bit.
         if live is None:
             live = ~state.done
+        tables = jax.tree.map(jnp.asarray, tables)
+        P = tables.ops.shape[-1]
         pc = state.pc
-        op_row = ops_t[pc]
-        imm_row = imm_t[pc]
-        a = _gather_operands(srcA_t[pc], imm_row, state.regs, state.rout, nbr)
-        b = _gather_operands(srcB_t[pc], imm_row, state.regs, state.rout, nbr)
+        op_row = tables.ops[pc]
+        imm_row = tables.imm[pc]
+        a = _gather_operands(tables.srcA[pc], imm_row, state.regs,
+                             state.rout, nbr)
+        b = _gather_operands(tables.srcB[pc], imm_row, state.regs,
+                             state.rout, nbr)
 
         # ---- memory ------------------------------------------------------
-        is_load = is_load_t[pc]
-        is_store = is_store_t[pc]
+        is_load = tables.is_load[pc]
+        is_store = tables.is_store[pc]
         # LWD/SWD address = imm; LWI addr = a; SWI addr = a (value = b).
         direct = (op_row == isa.OP["LWD"]) | (op_row == isa.OP["SWD"])
         addr = jnp.where(direct, imm_row, a) % mem_size
@@ -192,9 +199,9 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int,
         # ---- ALU + writeback ---------------------------------------------
         alu = _alu_results(op_row, a, b)
         result = jnp.where(is_load, load_val, alu)
-        writes = writes_rout_t[pc]
+        writes = tables.writes_rout[pc]
         rout_new = jnp.where(writes, result, state.rout)
-        d = dest_t[pc]
+        d = tables.dest[pc]
         regs_new = state.regs
         for k in range(4):
             hit = writes & (d == k)
@@ -212,7 +219,7 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int,
 
         # ---- control ------------------------------------------------------
         next_pc = _branch_target(op_row, a, b, imm_row, pc)
-        next_pc = jnp.clip(next_pc, 0, program.n_instrs - 1)
+        next_pc = jnp.clip(next_pc, 0, tables.n_instrs - 1)
         exited = (op_row == isa.OP["EXIT"]).any()
 
         new_state = SimState(
@@ -240,6 +247,62 @@ def make_step(program: Program, rows: int, cols: int, mem_size: int,
     return step
 
 
+def make_step(program: Program, rows: int, cols: int, mem_size: int,
+              max_banks: int = DEFAULT_MAX_BANKS):
+    """Single-program transition function ``step(state, hw, live=None)``.
+
+    Thin constant-closure wrapper over ``make_step_fn``: the program
+    tables are bound here as constants, preserving the original API for
+    callers that simulate one fixed kernel."""
+    if program.n_pes != rows * cols:
+        raise ValueError(
+            f"program {program.name!r}: n_pes={program.n_pes} does not "
+            f"match the {rows}x{cols} array")
+    tables = program_tables(program)
+    inner = make_step_fn(rows, cols, mem_size, max_banks=max_banks)
+
+    def step(state: SimState, hw: HwConfig,
+             live: Optional[jnp.ndarray] = None
+             ) -> Tuple[SimState, StepRecord]:
+        return inner(tables, state, hw, live=live)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _table_runner(rows: int, cols: int, mem_size: int, max_steps: int,
+                  record: bool, max_banks: int):
+    """One jitted ``run(tables, mem_init, hw)`` per static configuration:
+    the program is an operand, so every same-shape program (and, via
+    jax's shape cache, every distinct shape only once) shares the
+    compiled executable -- ``run_program`` no longer recompiles per
+    kernel."""
+    step = make_step_fn(rows, cols, mem_size, max_banks=max_banks)
+
+    @jax.jit
+    def _run(tables: ProgramTables, mem_init: jnp.ndarray, hw: HwConfig):
+        def body(state, _):
+            new_state, rec = step(tables, state, hw)
+            return new_state, (rec if record else 0)
+        P = tables.ops.shape[-1]
+        state0 = init_state(mem_init, P)
+        final, trace = jax.lax.scan(body, state0, None, length=max_steps)
+        return final, trace
+
+    return _run
+
+
+def make_table_runner(*, rows: int = 4, cols: int = 4, mem_size: int = 4096,
+                      max_steps: int = 4096, record: bool = True,
+                      max_banks: int = DEFAULT_MAX_BANKS):
+    """Program-as-operand runner: ``run(tables, mem_init, hw)``.
+
+    ``tables`` comes from ``program.program_tables`` (or a ProgramBatch
+    slice); the returned callable is shared across every program with the
+    same static configuration."""
+    return _table_runner(rows, cols, mem_size, max_steps, record, max_banks)
+
+
 def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
                 mem_size: int = 4096, max_steps: int = 4096,
                 record: bool = True, max_banks: int = DEFAULT_MAX_BANKS):
@@ -248,29 +311,29 @@ def make_runner(program: Program, *, rows: int = 4, cols: int = 4,
     ``trace`` is a StepRecord with a leading (max_steps,) axis, masked by
     ``valid``; pass ``record=False`` to drop it (cheapest DSE form).
     vmap over ``mem_init`` for data batches and over ``hw`` (stacked
-    HwConfig) for hardware sweeps.
+    HwConfig) for hardware sweeps.  Thin constant-closure wrapper over
+    ``make_table_runner``: two runners for same-shape programs share one
+    compiled executable.
     """
-    step = make_step(program, rows, cols, mem_size, max_banks=max_banks)
-
-    @jax.jit
-    def _run(mem_init: jnp.ndarray, hw: HwConfig):
-        def body(state, _):
-            new_state, rec = step(state, hw)
-            return new_state, (rec if record else 0)
-        state0 = init_state(mem_init, program.n_pes)
-        final, trace = jax.lax.scan(body, state0, None, length=max_steps)
-        return final, trace
+    if program.n_pes != rows * cols:
+        raise ValueError(
+            f"program {program.name!r}: n_pes={program.n_pes} does not "
+            f"match the {rows}x{cols} array")
+    tables = program_tables(program)
+    _run = _table_runner(rows, cols, mem_size, max_steps, record, max_banks)
 
     def run(mem_init: jnp.ndarray, hw: HwConfig):
         validate_bank_bound(hw.n_banks, max_banks, where="cgra.make_runner")
-        return _run(mem_init, hw)
+        return _run(tables, mem_init, hw)
 
     return run
 
 
 def run_program(program: Program, mem_init, hw: Optional[HwConfig] = None,
                 **kw):
-    """One-shot convenience wrapper (compiles per call).  The bank
+    """One-shot convenience wrapper.  Routes through the cached
+    table-runner, so repeated calls (any program of a shape already
+    seen under the same static config) skip recompilation.  The bank
     scoreboard bound is derived from the concrete config, so >16-bank
     topologies just work here."""
     from .hwconfig import baseline

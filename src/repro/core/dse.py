@@ -2,39 +2,53 @@
 
 The paper's value proposition is *instantaneous comparative analysis* of
 (kernel mapping x hardware topology) points.  Here that becomes a batched,
-mesh-sharded computation:
+mesh-sharded computation over all THREE design-space axes:
 
-  * the functional simulator (cgra.py) is vmapped over a *hardware-config
-    batch* (stacked HwConfig pytree) and over a *data batch* (different
-    memory images);
-  * the estimator's case-(vi) analytic model is re-expressed in pure jnp
-    (estimate_vi_jnp) so the full simulate->estimate path stays inside one
-    jitted program -- no host round-trip per design point;
-  * sweep() shards the flattened (hw x data) grid over every device of the
-    mesh -- pjit for the XLA scan path, shard_map for the fused Pallas
-    engine (each device runs its own VMEM-resident sweep over its shard):
-    on the production pod this is a 512-way data-parallel sweep, the
-    deployable version of the paper's tool.
+  * the functional simulator (cgra.py) takes the program tables as a
+    traced operand (``make_step_fn``) and is vmapped over the flattened
+    (program x hardware x data) grid: every lane carries a ``prog_idx``
+    and gathers its kernel's instruction rows from the stacked
+    ``(G, T_max, P)`` tables *inside* the jitted program -- the host
+    never tiles program tables, and swapping kernels never retraces;
+  * the estimator's case-(vi) analytic model is fused into the
+    simulation scan of ``make_sweep_fn`` as pure jnp (the inline
+    estimate below, mirroring ``estimator.estimate(case="vi")``), so the
+    full simulate->estimate path stays inside one jitted program -- no
+    host round-trip per design point;
+  * sweep() shards the flattened (program x hw x data) grid over every
+    device of the mesh -- pjit for the XLA scan path, shard_map for the
+    fused Pallas engine (each device runs its own VMEM-resident sweep
+    over its shard): on the production pod this is a 512-way
+    data-parallel sweep, the deployable version of the paper's tool.
 
-Different *mappings* (programs) have different shapes and are therefore a
-python-level loop around the sharded sweep.
+Different *mappings* (programs) are packed to a common padded shape by
+``program.pack_programs`` and swept as data: ONE compiled executable per
+backend covers the full G-kernel grid (``TRACE_COUNTS`` lets tests
+assert the no-retrace property).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional, Sequence
+from typing import Dict, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import isa
-from .cgra import make_step, init_state
+from .cgra import init_state, make_step_fn
 from .characterization import Profile
 from .hwconfig import HwConfig, stack_configs
 from .memory import (DEFAULT_MAX_BANKS, scoreboard_bound,
                      validate_bank_bound)
-from .program import Program
+from .program import (Program, ProgramBatch, as_program_batch, batch_tables,
+                      program_tables)
+
+# Incremented once per trace of each backend's sweep body (a Python side
+# effect only runs while tracing, never while executing the compiled
+# program).  Tests use deltas of these to assert that sweeping G kernels
+# compiles once and that same-shape program swaps hit the jit cache.
+TRACE_COUNTS: Dict[str, int] = {"xla": 0, "pallas": 0}
 
 
 def _shard_map(f, mesh, *, in_specs, out_specs):
@@ -82,24 +96,167 @@ def _profile_tables(profile: Profile):
     )
 
 
-def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
+def _norm_chunk(chunk_steps: Optional[int], max_steps: int) -> Optional[int]:
+    """None (single full-length scan) or the effective chunk size."""
+    if chunk_steps is None or chunk_steps >= max_steps:
+        return None
+    return max(1, chunk_steps)
+
+
+def _sweep_body(step, tab, tbl, mem_init, hw: HwConfig, max_steps: int,
+                chunk: Optional[int], mem_size: int) -> "SweepResult":
+    """One lane's fused simulate+estimate scan.  ``tab`` is this lane's
+    ProgramTables -- a per-lane gather of the stacked tables (operand
+    path) or the shared constant tables (single-program path); both
+    produce identical numerics."""
+    tab = jax.tree.map(jnp.asarray, tab)
+    P = tab.ops.shape[-1]
+    state0 = init_state(mem_init, P)
+    carry0 = (state0, jnp.float32(0.0), jnp.int32(-1), jnp.int32(0))
+
+    def body(carry, t):
+        state, e_acc, prev_pc, n_exec = carry
+        pc = state.pc
+        live = ~state.done & (t < max_steps)
+        new_state, rec = step(tab, state, hw, live=live)
+        # ---- fused case-(vi) estimate (mirrors estimator.py) --------------
+        ops = tab.ops[pc]
+        smul = ops == isa.OP["SMUL"]
+        scale = jnp.where(smul, jnp.asarray(hw.smul_power_scale,
+                                            jnp.float32), 1.0)
+        # Timing reuses the simulator's (case-iii-identical) model; the
+        # standalone estimator.py recomputes it independently.
+        busy = rec.busy
+        lat = rec.lat
+        wait = jnp.maximum(lat - busy, 0).astype(jnp.float32)
+        active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
+        gate = jnp.where(smul & ((rec.a == 0) | (rec.b == 0)),
+                         tbl["mulzero"], 1.0)
+        prev_ok = prev_pc >= 0
+        prev_safe = jnp.maximum(prev_pc, 0)
+        op_ch = prev_ok & (ops != tab.ops[prev_safe])
+        a_ch = prev_ok & (tab.srcA[pc] != tab.srcA[prev_safe])
+        b_ch = prev_ok & (tab.srcB[pc] != tab.srcB[prev_safe])
+        e_step = (tbl["p_dec"][ops] * scale
+                  + tbl["p_act"][ops] * scale * gate * active
+                  + tbl["p_idle"] * wait
+                  + tbl["e_src"][tab.kindA[pc]]
+                  + tbl["e_src"][tab.kindB[pc]]
+                  + op_ch * tbl["e_sw_op"]
+                  + (a_ch.astype(jnp.float32) + b_ch.astype(jnp.float32))
+                  * tbl["e_sw_mux"]).sum()
+        e_acc = e_acc + jnp.where(live, e_step, 0.0)
+        new_prev = jnp.where(live, pc, prev_pc)
+        n_exec = n_exec + live.astype(jnp.int32)
+        return (new_state, e_acc, new_prev, n_exec), None
+
+    if chunk is None:
+        carry, _ = jax.lax.scan(
+            body, carry0, jnp.arange(max_steps, dtype=jnp.int32))
+    else:
+        K = chunk
+
+        def chunk_cond(c):
+            t0, (state, _, _, _) = c
+            return (t0 < max_steps) & ~state.done
+
+        def chunk_body(c):
+            t0, carry = c
+            carry, _ = jax.lax.scan(
+                body, carry, t0 + jnp.arange(K, dtype=jnp.int32))
+            return (t0 + K, carry)
+
+        _, carry = jax.lax.while_loop(chunk_cond, chunk_body,
+                                      (jnp.int32(0), carry0))
+    final, e_uwcc, _, n_exec = carry
+    lat_cc = final.t_cc
+    energy_pj = e_uwcc * tbl["t_clk_ns"] * 1e-3
+    power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
+    checksum = (final.mem * (jnp.arange(mem_size, dtype=jnp.int32) | 1)
+                ).sum().astype(jnp.int32)
+    return SweepResult(lat_cc, energy_pj, power_mw, checksum, n_exec)
+
+
+@functools.lru_cache(maxsize=None)
+def _xla_sweep_core(rows: int, cols: int, mem_size: int, max_steps: int,
+                    chunk: Optional[int], max_banks: int):
+    """One jitted sweep core per static configuration (the multi-program
+    path).
+
+    Program tables, profile tables, memory images, hardware configs and
+    per-lane program indices are all *operands*: a second program set (or
+    profile) of the same padded shape re-uses the compiled executable --
+    zero retraces across kernels, the last recompile-per-design-point
+    removed from the hot loop."""
+    step = make_step_fn(rows, cols, mem_size, max_banks=max_banks)
+
+    def one(tables, tbl, mem_init, hw: HwConfig, gi):
+        TRACE_COUNTS["xla"] += 1          # trace-time only: retrace probe
+        # this lane's program: rows gathered from the stacked (G, T, P)
+        # tables by prog_idx -- a cheap gather, never a host-side tile.
+        # G == 1 (a static shape) skips the per-lane gather so the grid
+        # keeps the shared-table data flow (vmap sees unbatched tables ->
+        # plain gathers by pc, not batched-table gathers).
+        if tables.ops.shape[0] == 1:
+            tab = jax.tree.map(lambda x: jnp.asarray(x)[0], tables)
+        else:
+            tab = jax.tree.map(lambda x: jnp.asarray(x)[gi], tables)
+        return _sweep_body(step, tab, tbl, mem_init, hw, max_steps, chunk,
+                           mem_size)
+
+    return jax.jit(jax.vmap(one, in_axes=(None, None, 0, 0, 0)))
+
+
+def _xla_single_sweep_fn(program: Program, profile: Profile, rows: int,
+                         cols: int, mem_size: int, max_steps: int,
+                         chunk: Optional[int], max_banks: int):
+    """Seed-style single-program sweep: the program tables are closure
+    constants of an *unjitted* vmapped fn (the caller jits), keeping the
+    constant-folding-friendly data flow -- and the compile-per-program
+    cost -- of the original API.  Numerically identical to the operand
+    core with G=1."""
+    step = make_step_fn(rows, cols, mem_size, max_banks=max_banks)
+    tables = program_tables(program)
+    tbl = _profile_tables(profile)
+
+    def one(mem_init, hw: HwConfig):
+        TRACE_COUNTS["xla"] += 1          # trace-time only: retrace probe
+        return _sweep_body(step, tables, tbl, mem_init, hw, max_steps,
+                           chunk, mem_size)
+
+    return jax.vmap(one)
+
+
+def make_sweep_fn(program: Union[Program, ProgramBatch, Sequence[Program]],
+                  profile: Profile, *, rows: int = 4,
                   cols: int = 4, mem_size: int = 4096, max_steps: int = 2048,
                   backend: str = "xla", chunk_steps: Optional[int] = 64,
                   blk_b: int = 32, interpret: Optional[bool] = None,
                   max_banks: Optional[int] = None,
                   validate: bool = True):
-    """Build ``fn(mem_init (B,M), hw batched (B,)) -> SweepResult`` where the
-    case-(vi) estimate is fused into the simulation scan (single pass, no
-    trace materialization -- O(1) memory per design point).
+    """Build the fused sweep function where the case-(vi) estimate is
+    fused into the simulation scan (single pass, no trace
+    materialization -- O(1) memory per design point).
+
+    program: a single ``Program`` -> ``fn(mem_init (B, M), hw batched
+    (B,)) -> SweepResult`` (the original constant-closure API -- tables
+    are baked in as jit constants, fastest per-program data flow, one
+    compile per kernel); a sequence of programs or a ``ProgramBatch`` ->
+    ``fn(mem_init (B, M), hw (B,), prog_idx (B,))`` where each lane
+    gathers its kernel from the packed ``(G, T_max, P)`` tables inside
+    the jitted program and the tables are runtime operands of one cached
+    executable per static configuration: sweeping a different kernel set
+    of the same padded shape causes NO retrace (``TRACE_COUNTS``
+    observable).
 
     backend:
-      * ``"xla"``    -- vmapped ``lax.scan`` over ``core.cgra.make_step``
+      * ``"xla"``    -- vmapped ``lax.scan`` over ``core.cgra.make_step_fn``
         (the portable path);
       * ``"pallas"`` -- the fused multi-step VMEM-resident engine
         (``kernels.cgra_sweep``): K instructions per ``pallas_call``,
-        one HBM read of the program tables per batch tile.  ``interpret``
-        (default: auto, True off-TPU) runs it through the Pallas
-        interpreter so results are testable everywhere.
+        one HBM read of the stacked program tables per batch tile.
+        ``interpret`` (default: auto, True off-TPU) runs it through the
+        Pallas interpreter so results are testable everywhere.
     Both backends produce bit-identical latency_cc / checksum /
     steps_executed and energy equal up to float32 accumulation order.
 
@@ -127,105 +284,65 @@ def make_sweep_fn(program: Program, profile: Profile, *, rows: int = 4,
     if backend != "xla":
         raise ValueError(f"unknown sweep backend: {backend!r}")
 
-    step = make_step(program, rows, cols, mem_size, max_banks=max_banks)
-    P = program.n_pes
-    tbl = _profile_tables(profile)
-    ops_t = jnp.asarray(program.ops)
-    srcA_t = jnp.asarray(program.srcA)
-    srcB_t = jnp.asarray(program.srcB)
-    kindA_t = jnp.asarray(isa.SRC_KIND)[srcA_t]
-    kindB_t = jnp.asarray(isa.SRC_KIND)[srcB_t]
+    chunk = _norm_chunk(chunk_steps, max_steps)
+    if isinstance(program, Program):
+        # single-program API: seed-style constant-closure fast path
+        vfn = _xla_single_sweep_fn(program, profile, rows, cols, mem_size,
+                                   max_steps, chunk, max_banks)
 
-    def one(mem_init, hw: HwConfig):
-        state0 = init_state(mem_init, P)
-        carry0 = (state0, jnp.float32(0.0), jnp.int32(-1), jnp.int32(0))
+        def fn(mem_init, hw: HwConfig) -> SweepResult:
+            if validate:
+                validate_bank_bound(hw.n_banks, max_banks,
+                                    where="dse.make_sweep_fn(backend='xla')")
+            return vfn(mem_init, hw)
+    else:
+        tables = batch_tables(as_program_batch(program))
+        tbl = _profile_tables(profile)
+        core = _xla_sweep_core(rows, cols, mem_size, max_steps, chunk,
+                               max_banks)
 
-        def body(carry, t):
-            state, e_acc, prev_pc, n_exec = carry
-            pc = state.pc
-            live = ~state.done & (t < max_steps)
-            new_state, rec = step(state, hw, live=live)
-            # ---- fused case-(vi) estimate (mirrors estimator.py) ----------
-            ops = ops_t[pc]
-            smul = ops == isa.OP["SMUL"]
-            scale = jnp.where(smul, jnp.asarray(hw.smul_power_scale,
-                                                jnp.float32), 1.0)
-            # Timing reuses the simulator's (case-iii-identical) model; the
-            # standalone estimator.py recomputes it independently.
-            busy = rec.busy
-            lat = rec.lat
-            wait = jnp.maximum(lat - busy, 0).astype(jnp.float32)
-            active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
-            gate = jnp.where(smul & ((rec.a == 0) | (rec.b == 0)),
-                             tbl["mulzero"], 1.0)
-            prev_ok = prev_pc >= 0
-            op_ch = prev_ok & (ops != ops_t[jnp.maximum(prev_pc, 0)])
-            a_ch = prev_ok & (srcA_t[pc] != srcA_t[jnp.maximum(prev_pc, 0)])
-            b_ch = prev_ok & (srcB_t[pc] != srcB_t[jnp.maximum(prev_pc, 0)])
-            e_step = (tbl["p_dec"][ops] * scale
-                      + tbl["p_act"][ops] * scale * gate * active
-                      + tbl["p_idle"] * wait
-                      + tbl["e_src"][kindA_t[pc]] + tbl["e_src"][kindB_t[pc]]
-                      + op_ch * tbl["e_sw_op"]
-                      + (a_ch.astype(jnp.float32) + b_ch.astype(jnp.float32))
-                      * tbl["e_sw_mux"]).sum()
-            e_acc = e_acc + jnp.where(live, e_step, 0.0)
-            new_prev = jnp.where(live, pc, prev_pc)
-            n_exec = n_exec + live.astype(jnp.int32)
-            return (new_state, e_acc, new_prev, n_exec), None
-
-        if chunk_steps is None or chunk_steps >= max_steps:
-            carry, _ = jax.lax.scan(
-                body, carry0, jnp.arange(max_steps, dtype=jnp.int32))
-        else:
-            K = max(1, chunk_steps)
-
-            def chunk_cond(c):
-                t0, (state, _, _, _) = c
-                return (t0 < max_steps) & ~state.done
-
-            def chunk_body(c):
-                t0, carry = c
-                carry, _ = jax.lax.scan(
-                    body, carry, t0 + jnp.arange(K, dtype=jnp.int32))
-                return (t0 + K, carry)
-
-            _, carry = jax.lax.while_loop(chunk_cond, chunk_body,
-                                          (jnp.int32(0), carry0))
-        final, e_uwcc, _, n_exec = carry
-        lat_cc = final.t_cc
-        energy_pj = e_uwcc * tbl["t_clk_ns"] * 1e-3
-        power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
-        checksum = (final.mem * (jnp.arange(mem_size, dtype=jnp.int32) | 1)
-                    ).sum().astype(jnp.int32)
-        return SweepResult(lat_cc, energy_pj, power_mw, checksum, n_exec)
-
-    vfn = jax.vmap(one)
-    if not validate:
-        return vfn
-
-    def fn(mem_init, hw: HwConfig) -> SweepResult:
-        validate_bank_bound(hw.n_banks, max_banks,
-                            where="dse.make_sweep_fn(backend='xla')")
-        return vfn(mem_init, hw)
+        def fn(mem_init, hw: HwConfig, prog_idx) -> SweepResult:
+            if validate:
+                validate_bank_bound(hw.n_banks, max_banks,
+                                    where="dse.make_sweep_fn(backend='xla')")
+            return core(tables, tbl, mem_init, hw,
+                        jnp.asarray(prog_idx, jnp.int32))
 
     return fn
 
 
-def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
-          mem_images: np.ndarray, *, mesh: Optional[jax.sharding.Mesh] = None,
+def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
+          = None, profile: Profile = None,
+          hw_configs: Sequence[HwConfig] = None,
+          mem_images: np.ndarray = None, *,
+          programs: Optional[Sequence[Program]] = None,
+          mesh: Optional[jax.sharding.Mesh] = None,
           max_steps: int = 2048, mem_size: int = 4096,
           backend: str = "xla", chunk_steps: Optional[int] = 64,
           blk_b: int = 32, interpret: Optional[bool] = None) -> SweepResult:
-    """Run the (hw x data) grid, optionally sharded over every device of a
-    mesh.  mem_images: (D, mem_size).  Grid is flattened to B = H*D, row
-    ``h * D + d`` pairing hw_configs[h] with mem_images[d].
+    """Run the full (program x hw x data) grid through ONE compiled
+    executable per backend, optionally sharded over every device of a
+    mesh.
 
-    The grid is broadcast *by index*: the D distinct memory images go to
-    the device(s) once and each design point gathers its image inside the
-    jitted program -- the host never materializes the H*D*mem_size tiled
-    copy (a 512-config x 64-image sweep used to hold ~8 GB of redundant
-    int32 on the host; now it holds the 64 images).
+    program/programs: a single ``Program``, a sequence of programs, or a
+    prebuilt ``ProgramBatch`` (``programs=`` is a keyword alias for call
+    sites that sweep many kernels).  mem_images: (D, mem_size).  The
+    grid is flattened to ``B = G*H*D``, row ``(g*H + h)*D + d`` pairing
+    programs[g] with hw_configs[h] and mem_images[d]; a single program
+    keeps the legacy ``h*D + d`` layout (G=1).
+
+    The grid is broadcast *by index* on both the data and program axes:
+    the D distinct memory images and the packed (G, T_max, P) program
+    tables go to the device(s) once, and each design point gathers its
+    image and its kernel's instruction rows inside the jitted program --
+    the host never materializes the tiled copies (a 512-config x
+    64-image sweep used to hold ~8 GB of redundant int32 on the host;
+    now it holds the 64 images, and G kernels cost one compiled
+    executable per sweep() call instead of G).  Each sweep() call still
+    jits its own grid wrapper; to also amortize compiles *across* calls,
+    hold on to the fn returned by ``make_sweep_fn`` -- its program
+    tables are operands of an lru-cached executable, so same-padded-shape
+    kernel sets re-use it with zero retraces (``TRACE_COUNTS``).
 
     Mesh sharding works for both backends: the XLA scan path is pjit'ed
     (GSPMD partitions the vmapped scan) while the Pallas engine runs SPMD
@@ -238,66 +355,84 @@ def sweep(program: Program, profile: Profile, hw_configs: Sequence[HwConfig],
     the configs (padded to a power of two); configs beyond the hard
     ceiling fail with an assertion instead of silently aliasing.
     """
+    if programs is not None:
+        if program is not None:
+            raise TypeError("sweep(): pass either program or programs=, "
+                            "not both")
+        program = list(programs)
+    batch = as_program_batch(program)
+    G = batch.n_programs
     H, D = len(hw_configs), mem_images.shape[0]
     # config-derived scoreboard bound (>= the 16-slot default so common
     # sweeps share compile caches; hard ceiling asserted inside)
     n_banks_req = max(int(np.asarray(c.n_banks)) for c in hw_configs)
     max_banks = scoreboard_bound(max(n_banks_req, DEFAULT_MAX_BANKS))
     hw_b = stack_configs(list(hw_configs))
-    # broadcast to the full grid
-    hw_grid = jax.tree.map(lambda x: jnp.repeat(x, D, axis=0), hw_b)
+    # broadcast to the full flat grid: hw h repeats over the data axis,
+    # then the (hw x data) block tiles over the program axis
+    hw_grid = jax.tree.map(
+        lambda x: jnp.tile(jnp.repeat(x, D, axis=0), G), hw_b)
     images = jnp.asarray(mem_images, jnp.int32)          # (D, M), one copy
-    img_idx = jnp.tile(jnp.arange(D, dtype=jnp.int32), H)  # (H*D,)
+    img_idx = jnp.tile(jnp.arange(D, dtype=jnp.int32), G * H)   # (G*H*D,)
+    prog_idx = jnp.repeat(jnp.arange(G, dtype=jnp.int32), H * D)
     # validate=False: every config was just checked against the derived
     # bound above, so no runtime guard needs to be staged into the
     # compiled sweep
-    fn = make_sweep_fn(program, profile, max_steps=max_steps,
-                       mem_size=mem_size, backend=backend,
-                       chunk_steps=chunk_steps, blk_b=blk_b,
-                       interpret=interpret, max_banks=max_banks,
-                       validate=False)
+    kw = dict(max_steps=max_steps, mem_size=mem_size, backend=backend,
+              chunk_steps=chunk_steps, blk_b=blk_b, interpret=interpret,
+              max_banks=max_banks, validate=False)
+    if G == 1:
+        # single-kernel grid: the constant-closure fast path (prog_idx
+        # is all zeros anyway)
+        fn1 = make_sweep_fn(batch.program(0), profile, **kw)
+        fn = lambda mem, hw, gi: fn1(mem, hw)
+    else:
+        fn = make_sweep_fn(batch, profile, **kw)
 
-    def grid_fn(idx, hw):
-        return fn(jnp.take(images, idx, axis=0), hw)
+    def grid_fn(idx, hw, gi):
+        return fn(jnp.take(images, idx, axis=0), hw, gi)
 
     if mesh is None:
-        return jax.jit(grid_fn)(img_idx, hw_grid)
+        return jax.jit(grid_fn)(img_idx, hw_grid, prog_idx)
 
     from ..parallel.sharding import (batch_sharding, flat_batch_spec,
-                                     pad_batch, replicated_sharding)
+                                     pad_batch, padded_len,
+                                     replicated_sharding)
     # Both mesh paths need the flat grid divisible by the device count;
     # pad with duplicate (harmless, independent) lanes and slice back.
-    B = H * D
-    n_dev = int(mesh.devices.size)
-    Bp = -(-B // n_dev) * n_dev
+    B = G * H * D
+    Bp = padded_len(B, int(mesh.devices.size))
     img_idx = pad_batch(img_idx, Bp)
+    prog_idx = pad_batch(prog_idx, Bp)
     hw_grid = jax.tree.map(lambda x: pad_batch(x, Bp), hw_grid)
 
     if backend == "pallas":
         # pallas_call does not partition under pjit/GSPMD; run the engine
-        # SPMD with shard_map over the flat (hw x data) axis.  The images
-        # are replicated and gathered per-shard by index, exactly as in
-        # the unsharded grid_fn.
+        # SPMD with shard_map over the flat (program x hw x data) axis.
+        # The images are replicated and gathered per-shard by index (the
+        # program tables ride inside fn as replicated operands), exactly
+        # as in the unsharded grid_fn.
         from jax.sharding import PartitionSpec
 
-        def shard_fn(imgs, idx, hw):
-            return fn(jnp.take(imgs, idx, axis=0), hw)
+        def shard_fn(imgs, idx, gi, hw):
+            return fn(jnp.take(imgs, idx, axis=0), hw, gi)
 
         sharded = jax.jit(_shard_map(
             shard_fn, mesh,
             in_specs=(PartitionSpec(), flat_batch_spec(mesh),
-                      flat_batch_spec(mesh)),
+                      flat_batch_spec(mesh), flat_batch_spec(mesh)),
             out_specs=flat_batch_spec(mesh)))
-        res = sharded(images, img_idx, hw_grid)
+        res = sharded(images, img_idx, prog_idx, hw_grid)
     else:
         sh = batch_sharding(mesh)
         rep = replicated_sharding(mesh)
         img_idx = jax.device_put(img_idx, sh)
-        # every hw_grid leaf is 1-D by construction (stack_configs + repeat)
+        prog_idx = jax.device_put(prog_idx, sh)
+        # every hw_grid leaf is 1-D by construction (stack_configs + tile)
         hw_grid = jax.tree.map(lambda x: jax.device_put(x, sh), hw_grid)
         grid_fn = jax.jit(
             grid_fn,
-            in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid)),
+            in_shardings=(sh, jax.tree.map(lambda _: sh, hw_grid), sh),
             out_shardings=rep)
-        res = grid_fn(img_idx, hw_grid)
+        res = grid_fn(img_idx, hw_grid, prog_idx)
     return jax.tree.map(lambda x: x[:B], res)

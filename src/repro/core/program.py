@@ -1,9 +1,20 @@
-"""CGRA program container and a small textual assembler.
+"""CGRA program container, program batching, and a small textual assembler.
 
 A ``Program`` is the dense, array-form encoding of a kernel: for each of
 ``n_instrs`` CGRA instructions and each of ``n_pes`` processing elements it
-stores (op, dest, srcA, srcB, imm).  The arrays are plain numpy on the host
-and are closed over (as constants) by the jitted simulator.
+stores (op, dest, srcA, srcB, imm).  The arrays are plain numpy on the
+host; the simulator consumes them as *runtime operands* (``ProgramTables``,
+see ``cgra.make_step_fn``), so swapping kernels never forces a retrace --
+the program is data, not a compile-time constant.
+
+``pack_programs`` stacks G kernels into one ``ProgramBatch``: every
+program is NOP-padded to the common ``(T_max, P)`` shape, the true length
+is kept per program (the simulator clips the PC to each program's own
+last instruction, so padding is never executed and EXIT semantics are
+preserved bit-for-bit), and the derived static tables (IS_LOAD /
+IS_STORE / WRITES_ROUT masks, SRC_KIND operand classes) are precomputed
+as stacked ``(G, T_max, P)`` arrays.  The batch is the program axis of
+the (program x hardware x data) DSE grid (``dse.sweep``).
 
 Two authoring layers:
   * programmatic: ``ProgramBuilder`` -- used by apps/ to generate
@@ -14,7 +25,7 @@ Two authoring layers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,24 +51,185 @@ class Program:
         return int(self.ops.shape[1])
 
     def validate(self) -> "Program":
+        # ValueError (never a bare assert): validation must survive
+        # ``python -O``, and the message must name the program and the
+        # offending field/range so a bad kernel in a G-program batch is
+        # attributable.
         T, P = self.ops.shape
-        for arr, hi in ((self.ops, len(OPCODES)), (self.dest, len(DEST)),
-                        (self.srcA, len(SRC)), (self.srcB, len(SRC))):
-            assert arr.shape == (T, P), "field shape mismatch"
-            assert arr.min() >= 0 and arr.max() < hi, "field out of range"
+        fields = (("ops", self.ops, len(OPCODES)),
+                  ("dest", self.dest, len(DEST)),
+                  ("srcA", self.srcA, len(SRC)),
+                  ("srcB", self.srcB, len(SRC)))
+        for fname, arr, hi in fields:
+            if arr.shape != (T, P):
+                raise ValueError(
+                    f"program {self.name!r}: field {fname!r} has shape "
+                    f"{arr.shape}, expected {(T, P)}")
+            if arr.size and not (arr.min() >= 0 and arr.max() < hi):
+                raise ValueError(
+                    f"program {self.name!r}: field {fname!r} out of range "
+                    f"[0, {hi}) -- got min {int(arr.min())}, "
+                    f"max {int(arr.max())}")
         # Branch targets must be within the program.
         from .isa import IS_BRANCH
         br = IS_BRANCH[self.ops]
         if br.any():
             tgt = self.imm[br]
-            assert tgt.min() >= 0 and tgt.max() < T, (
-                f"branch target out of range in {self.name}")
+            if not (tgt.min() >= 0 and tgt.max() < T):
+                raise ValueError(
+                    f"program {self.name!r}: branch target out of range "
+                    f"[0, {T}) -- got min {int(tgt.min())}, "
+                    f"max {int(tgt.max())}")
         return self
 
     def slot(self, t: int, p: int) -> PEInstr:
         return PEInstr(int(self.ops[t, p]), int(self.dest[t, p]),
                        int(self.srcA[t, p]), int(self.srcB[t, p]),
                        int(self.imm[t, p]))
+
+
+# --------------------------------------------------------------------------
+# Program-as-data: runtime table form and multi-kernel batches
+# --------------------------------------------------------------------------
+
+
+class ProgramTables(NamedTuple):
+    """The program as a pytree of runtime operands for the simulator.
+
+    Leaves are ``(T, P)`` (single program, ``program_tables``) or
+    ``(G, T_max, P)`` stacked (``batch_tables``), with ``n_instrs``
+    scalar / ``(G,)`` carrying each program's *true* length: the
+    simulator clips the PC to ``n_instrs - 1`` per lane, so NOP padding
+    beyond a program's end is never executed.  Because these are traced
+    arguments (not closure constants), one compiled step/sweep
+    executable serves every program of the same padded shape.
+    """
+    ops: np.ndarray          # int32 opcodes
+    dest: np.ndarray         # int32 destination selectors
+    srcA: np.ndarray         # int32 operand-A source selectors
+    srcB: np.ndarray         # int32 operand-B source selectors
+    imm: np.ndarray          # int32 immediates / branch targets
+    is_load: np.ndarray      # bool  derived: op reads memory
+    is_store: np.ndarray     # bool  derived: op writes memory
+    writes_rout: np.ndarray  # bool  derived: op writes ROUT
+    kindA: np.ndarray        # int32 derived: SRC_KIND of srcA (case vi)
+    kindB: np.ndarray        # int32 derived: SRC_KIND of srcB (case vi)
+    n_instrs: np.ndarray     # int32 true program length(s)
+
+
+def _derived_tables(ops: np.ndarray, srcA: np.ndarray, srcB: np.ndarray):
+    from . import isa
+    return (isa.IS_LOAD[ops], isa.IS_STORE[ops], isa.WRITES_ROUT[ops],
+            isa.SRC_KIND[srcA].astype(np.int32),
+            isa.SRC_KIND[srcB].astype(np.int32))
+
+
+def program_tables(program: "Program") -> ProgramTables:
+    """Single-program ``(T, P)`` runtime tables (n_instrs scalar)."""
+    isld, isst, wr, kA, kB = _derived_tables(program.ops, program.srcA,
+                                             program.srcB)
+    return ProgramTables(program.ops, program.dest, program.srcA,
+                         program.srcB, program.imm, isld, isst, wr, kA, kB,
+                         np.int32(program.n_instrs))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramBatch:
+    """G kernels packed to a common ``(T_max, P)`` shape (see
+    ``pack_programs``).  Field arrays are ``(G, T_max, P)``; ``n_instrs``
+    is ``(G,)`` with the true (pre-padding) lengths."""
+    ops: np.ndarray
+    dest: np.ndarray
+    srcA: np.ndarray
+    srcB: np.ndarray
+    imm: np.ndarray
+    n_instrs: np.ndarray          # (G,) int32 true lengths
+    names: Tuple[str, ...]
+
+    @property
+    def n_programs(self) -> int:
+        return int(self.ops.shape[0])
+
+    @property
+    def t_max(self) -> int:
+        return int(self.ops.shape[1])
+
+    @property
+    def n_pes(self) -> int:
+        return int(self.ops.shape[2])
+
+    def program(self, g: int) -> Program:
+        """Recover program ``g`` (padding stripped)."""
+        t = int(self.n_instrs[g])
+        return Program(self.ops[g, :t], self.dest[g, :t], self.srcA[g, :t],
+                       self.srcB[g, :t], self.imm[g, :t],
+                       name=self.names[g])
+
+    def tables(self) -> ProgramTables:
+        return batch_tables(self)
+
+
+def batch_tables(batch: ProgramBatch) -> ProgramTables:
+    """Stacked ``(G, T_max, P)`` runtime tables for a ProgramBatch."""
+    isld, isst, wr, kA, kB = _derived_tables(batch.ops, batch.srcA,
+                                             batch.srcB)
+    return ProgramTables(batch.ops, batch.dest, batch.srcA, batch.srcB,
+                         batch.imm, isld, isst, wr, kA, kB,
+                         batch.n_instrs.astype(np.int32))
+
+
+def pack_programs(programs: Sequence[Program],
+                  pad_slot: PEInstr = NOP_SLOT) -> ProgramBatch:
+    """Pack G kernels into one ProgramBatch.
+
+    Every program is validated (ValueError on malformed fields or branch
+    targets outside its own length -- revalidation here means a bad
+    kernel is caught before it is baked into a padded batch where its
+    branch targets would alias into padding), then NOP-padded to the
+    longest program's length.  Padding never executes: the simulator
+    clips each lane's PC to that program's true ``n_instrs - 1``,
+    exactly as the unpadded simulator clips to its static ``T - 1``, so
+    a packed program is bit-identical to the same program swept alone.
+    """
+    progs = list(programs)
+    if not progs:
+        raise ValueError("pack_programs: empty program sequence")
+    for p in progs:
+        if not isinstance(p, Program):
+            raise ValueError(
+                f"pack_programs: expected Program, got {type(p).__name__}")
+        p.validate()
+    P = progs[0].n_pes
+    for p in progs:
+        if p.n_pes != P:
+            raise ValueError(
+                f"pack_programs: program {p.name!r} has n_pes={p.n_pes}, "
+                f"but {progs[0].name!r} has n_pes={P}; all programs of a "
+                f"batch must target the same array")
+    t_max = max(p.n_instrs for p in progs)
+
+    def pad(arr: np.ndarray, fill: int) -> np.ndarray:
+        out = np.full((t_max, P), fill, np.int32)
+        out[:arr.shape[0]] = arr
+        return out
+
+    fields = {"op": "ops", "dest": "dest", "srcA": "srcA", "srcB": "srcB",
+              "imm": "imm"}
+    stacked = {attr: np.stack([pad(getattr(p, attr), getattr(pad_slot, f))
+                               for p in progs])
+               for f, attr in fields.items()}
+    return ProgramBatch(n_instrs=np.array([p.n_instrs for p in progs],
+                                          np.int32),
+                        names=tuple(p.name for p in progs), **stacked)
+
+
+def as_program_batch(program) -> ProgramBatch:
+    """Coerce Program | Sequence[Program] | ProgramBatch -> ProgramBatch."""
+    if isinstance(program, ProgramBatch):
+        return program
+    if isinstance(program, Program):
+        return pack_programs([program])
+    return pack_programs(program)
 
 
 class ProgramBuilder:

@@ -5,13 +5,22 @@ points by K CGRA instructions, with every piece of architectural state --
 registers (blk_b, 4, P), output registers (blk_b, P), per-lane PC / done /
 cycle counter / executed-step counter / case-(vi) energy accumulator, and
 the full (blk_b, M) scratchpad memory image -- resident in VMEM for the
-whole chunk.  The
-program tables (T, P) are read from HBM once per tile instead of once per
-instruction, which is the entire point: the XLA scan path re-reads state
-every step, while here HBM traffic is amortized K-fold.
+whole chunk.  The stacked program tables (G*T_max, P) -- all G kernels of
+the sweep, flattened on the instruction axis -- are read from HBM once
+per tile instead of once per instruction, which is the entire point: the
+XLA scan path re-reads state every step, while here HBM traffic is
+amortized K-fold.
+
+The *program axis is data*: each lane carries a program index, and every
+instruction-row gather is based at ``prog_idx * T_max``, so one compiled
+kernel sweeps heterogeneous kernels exactly as it sweeps heterogeneous
+hardware descriptors.  Per-lane true program lengths clip the PC, so NOP
+padding beyond a short kernel's end is never executed (bit-identical to
+sweeping that kernel alone).
 
 Fused per step, entirely on the VPU (no MXU use -- int32 lane math):
-  * per-lane PC gather of the instruction row (op/dest/srcA/srcB/imm),
+  * per-lane (program, PC) gather of the instruction row
+    (op/dest/srcA/srcB/imm),
   * operand-source gather (immediates, register file, own/neighbour ROUT),
   * branchless ALU dispatch over the full ISA (shared with the
     kernels/cgra_step single-instruction kernel: alu_select),
@@ -45,17 +54,22 @@ HW_INT_FIELDS = ("smul_lat", "bus", "interleaved", "n_banks",
                  "dma_per_pe", "t_mem")
 
 
-def _gather_rows(table, pc):
-    """(T, P) table, (blk,) per-lane pc -> (blk, P) rows."""
-    return jnp.take(table, pc, axis=0, mode="clip")
+def _gather_rows(table, row):
+    """(G*T, P) stacked table, (blk,) per-lane row index (prog_idx * T +
+    pc) -> (blk, P) rows."""
+    return jnp.take(table, row, axis=0, mode="clip")
 
 
 def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
                        n_instrs: int, k_steps: int, max_steps: int,
                        p_idle: float, e_sw_op: float, e_sw_mux: float,
-                       mulzero: float,
+                       mulzero: float, n_progs: int = 1,
                        max_banks: int = DEFAULT_MAX_BANKS) -> Callable:
     """Build the fused K-step kernel body (closed over all static config).
+
+    n_instrs is the padded per-program length T_max; the program tables
+    arrive flattened (n_progs * T_max, P) and each lane's gathers are
+    based at its program index (see module docstring).
 
     max_banks: static bank-scoreboard width, config-derived by the driver
     (memory.scoreboard_bound); a power of two so the VMEM tile stays
@@ -133,9 +147,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             done_cols.append(jnp.where(req, slot + t_mem, 0))
         return jnp.stack(done_cols, axis=1).astype(jnp.int32)
 
-    def kernel(start_ref, ops_ref, dest_ref, srcA_ref, srcB_ref, imm_ref,
-               isld_ref, isst_ref, wr_ref, kA_ref, kB_ref,
-               pdec_ref, pact_ref, esrc_ref, hwi_ref, hwf_ref,
+    def kernel(start_ref, plen_ref, ops_ref, dest_ref, srcA_ref, srcB_ref,
+               imm_ref, isld_ref, isst_ref, wr_ref, kA_ref, kB_ref,
+               pdec_ref, pact_ref, esrc_ref, hwi_ref, hwf_ref, gidx_ref,
                mem_ref, regs_ref, rout_ref, pc_ref, done_ref, tcc_ref,
                eacc_ref, prev_ref, nexec_ref,
                omem_ref, oregs_ref, orout_ref, opc_ref, odone_ref,
@@ -162,6 +176,13 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         dma_per_pe = hw_i[:, 4]
         t_mem = hw_i[:, 5]
         smul_scale = hwf_ref[...]
+        # per-lane program: row gathers are based at gi * T in the
+        # flattened (G*T, P) tables; the PC clips to this lane's true
+        # program length so padding never executes
+        gi = gidx_ref[...]
+        plen = plen_ref[...]
+        base = gi * T
+        lane_len = jnp.take(plen, gi, mode="clip")
         blk = smul_lat.shape[0]
         lane_rows = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
 
@@ -169,14 +190,15 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec = carry
             budget_ok = start + k < max_steps
             live = (done == 0) & budget_ok                    # (blk,)
-            op_row = _gather_rows(ops_t, pc)                  # (blk, P)
-            imm_row = _gather_rows(imm_t, pc)
-            a = _operands(_gather_rows(srcA_t, pc), imm_row, regs, rout)
-            b = _operands(_gather_rows(srcB_t, pc), imm_row, regs, rout)
+            row = base + pc
+            op_row = _gather_rows(ops_t, row)                 # (blk, P)
+            imm_row = _gather_rows(imm_t, row)
+            a = _operands(_gather_rows(srcA_t, row), imm_row, regs, rout)
+            b = _operands(_gather_rows(srcB_t, row), imm_row, regs, rout)
 
             # ---- memory --------------------------------------------------
-            is_load = _gather_rows(isld_t, pc) > 0
-            is_store = _gather_rows(isst_t, pc) > 0
+            is_load = _gather_rows(isld_t, row) > 0
+            is_store = _gather_rows(isst_t, row) > 0
             direct = (op_row == OP_LWD) | (op_row == OP_SWD)
             addr = jnp.where(direct, imm_row, a) % M
             load_val = jnp.take_along_axis(mem, addr, axis=1)
@@ -188,9 +210,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             # ---- ALU + writeback -----------------------------------------
             alu = alu_select(op_row, a, b)
             result = jnp.where(is_load, load_val, alu)
-            writes = _gather_rows(wr_t, pc) > 0
+            writes = _gather_rows(wr_t, row) > 0
             rout_new = jnp.where(writes, result, rout)
-            d_row = _gather_rows(dest_t, pc)
+            d_row = _gather_rows(dest_t, row)
             regs_new = jnp.stack(
                 [jnp.where(writes & (d_row == r), result, regs[:, r, :])
                  for r in range(4)], axis=1)
@@ -214,7 +236,7 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             target = jnp.take_along_axis(imm_row, first[:, None],
                                          axis=1)[:, 0]
             next_pc = jnp.clip(jnp.where(any_taken, target, pc + 1),
-                               0, T - 1).astype(jnp.int32)
+                               0, lane_len - 1).astype(jnp.int32)
             exited = (op_row == OP_EXIT).any(axis=1)
 
             # ---- fused case-(vi) energy (mirrors core/dse.py) ------------
@@ -224,17 +246,17 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
             gate = jnp.where(smul & ((a == 0) | (b == 0)), mulzero, 1.0)
             prev_ok = (prev_pc >= 0)[:, None]
-            prev_safe = jnp.maximum(prev_pc, 0)
-            op_ch = prev_ok & (op_row != _gather_rows(ops_t, prev_safe))
-            a_ch = prev_ok & (_gather_rows(srcA_t, pc)
-                              != _gather_rows(srcA_t, prev_safe))
-            b_ch = prev_ok & (_gather_rows(srcB_t, pc)
-                              != _gather_rows(srcB_t, prev_safe))
+            prev_row = base + jnp.maximum(prev_pc, 0)
+            op_ch = prev_ok & (op_row != _gather_rows(ops_t, prev_row))
+            a_ch = prev_ok & (_gather_rows(srcA_t, row)
+                              != _gather_rows(srcA_t, prev_row))
+            b_ch = prev_ok & (_gather_rows(srcB_t, row)
+                              != _gather_rows(srcB_t, prev_row))
             e_step = (p_dec[op_row] * scale
                       + p_act[op_row] * scale * gate * active
                       + p_idle * wait
-                      + e_src[_gather_rows(kA_t, pc)]
-                      + e_src[_gather_rows(kB_t, pc)]
+                      + e_src[_gather_rows(kA_t, row)]
+                      + e_src[_gather_rows(kB_t, row)]
                       + op_ch * e_sw_op
                       + (a_ch.astype(jnp.float32)
                          + b_ch.astype(jnp.float32)) * e_sw_mux

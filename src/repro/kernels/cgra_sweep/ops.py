@@ -1,10 +1,19 @@
 """Driver for the fused multi-step Pallas sweep engine.
 
-``make_pallas_sweep_fn`` builds a jitted ``fn(mem_init (B, M), hw batched
-(B,)) -> SweepResult`` with the same contract as the XLA path built by
-``core.dse.make_sweep_fn(backend="xla")``: bit-identical latency,
-checksum and executed-step counts, energy equal to float32 accumulation
-order.
+``make_pallas_sweep_fn`` builds a jitted sweep with the same contract as
+the XLA path built by ``core.dse.make_sweep_fn(backend="xla")``:
+bit-identical latency, checksum and executed-step counts, energy equal
+to float32 accumulation order.  Given a single ``Program`` it returns
+``fn(mem_init (B, M), hw batched (B,))``; given a program sequence or a
+``ProgramBatch`` it returns ``fn(mem_init, hw, prog_idx)`` and each lane
+gathers its kernel's rows from the stacked (G*T_max, P) tables inside
+the kernel -- the program axis is swept as data, through one compiled
+engine.
+
+The program tables, per-program lengths and profile vectors are
+*operands* of an lru-cached jitted core (one per static configuration),
+so a different kernel set of the same padded shape re-uses the compiled
+engine with zero retraces (observable via ``core.dse.TRACE_COUNTS``).
 
 Chunked early exit: the host loop issues K-instruction chunks through one
 ``pallas_call`` each and stops as soon as every batch lane reports done,
@@ -17,6 +26,7 @@ engine (and its tests) run everywhere, including CPU CI.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -28,54 +38,33 @@ from ...core import isa
 from ...core.characterization import Profile
 from ...core.hwconfig import HwConfig
 from ...core.memory import DEFAULT_MAX_BANKS, validate_bank_bound
-from ...core.program import Program
+from ...core.program import Program, as_program_batch, batch_tables
 from .kernel import HW_INT_FIELDS, build_sweep_kernel
 
 
-def make_pallas_sweep_fn(program: Program, profile: Profile, *,
-                         rows: int = 4, cols: int = 4, mem_size: int = 4096,
-                         max_steps: int = 2048,
-                         chunk_steps: Optional[int] = 64,
-                         blk_b: int = 32,
-                         interpret: Optional[bool] = None,
-                         max_banks: int = DEFAULT_MAX_BANKS,
-                         validate: bool = True):
-    """Build the Pallas-backed sweep function (see module docstring)."""
-    from ...core.dse import SweepResult   # function-level: avoids cycle
+@functools.lru_cache(maxsize=None)
+def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
+                       n_progs: int, k_steps: int, max_steps: int,
+                       max_banks: int, blk_b: int, interpret: bool,
+                       p_idle: float, e_sw_op: float, e_sw_mux: float,
+                       mulzero: float, t_clk: float):
+    """One jitted Pallas sweep core per static configuration; program
+    tables / lengths / profile vectors / hw / prog_idx are operands."""
+    from ...core.dse import SweepResult, TRACE_COUNTS   # avoids cycle
 
-    P = program.n_pes
-    assert P == rows * cols
-    T = program.n_instrs
+    P = rows * cols
+    T = t_max
+    G = n_progs
     M = mem_size
-    K = max(1, min(chunk_steps or max_steps, max_steps))
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-
-    # Program tables + static per-slot masks, one HBM read per tile.
-    ops_t = jnp.asarray(program.ops, jnp.int32)
-    dest_t = jnp.asarray(program.dest, jnp.int32)
-    srcA_t = jnp.asarray(program.srcA, jnp.int32)
-    srcB_t = jnp.asarray(program.srcB, jnp.int32)
-    imm_t = jnp.asarray(program.imm, jnp.int32)
-    isld_t = jnp.asarray(isa.IS_LOAD[program.ops], jnp.int32)
-    isst_t = jnp.asarray(isa.IS_STORE[program.ops], jnp.int32)
-    wr_t = jnp.asarray(isa.WRITES_ROUT[program.ops], jnp.int32)
-    kA_t = jnp.asarray(isa.SRC_KIND[program.srcA], jnp.int32)
-    kB_t = jnp.asarray(isa.SRC_KIND[program.srcB], jnp.int32)
-    p_dec = jnp.asarray(profile.p_dec, jnp.float32)
-    p_act = jnp.asarray(profile.p_act, jnp.float32)
-    e_src = jnp.asarray(profile.e_src, jnp.float32)
+    K = k_steps
 
     kern = build_sweep_kernel(
         rows=rows, cols=cols, mem_size=M, n_instrs=T, k_steps=K,
-        max_steps=max_steps, max_banks=max_banks,
-        p_idle=float(np.asarray(profile.p_idle)),
-        e_sw_op=float(np.asarray(profile.e_sw_op)),
-        e_sw_mux=float(np.asarray(profile.e_sw_mux)),
-        mulzero=float(np.asarray(profile.mulzero)))
+        max_steps=max_steps, max_banks=max_banks, n_progs=G,
+        p_idle=p_idle, e_sw_op=e_sw_op, e_sw_mux=e_sw_mux, mulzero=mulzero)
 
-    def _chunk_call(Bp, start, hw_i, hw_f, mem, regs, rout, pc, done,
-                    t_cc, e_acc, prev, n_exec):
+    def _chunk_call(Bp, start, tabs, plen, prof, hw_i, hw_f, gidx,
+                    mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec):
         grid = (Bp // blk_b,)
         bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
         lane1 = pl.BlockSpec((blk_b,), lambda i: (i,))
@@ -83,20 +72,21 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
                                           lambda i: (i,) + (0,) * len(rest))
         state_specs = [lane(M), lane(4, P), lane(P), lane1, lane1, lane1,
                        lane1, lane1, lane1]
-        in_specs = ([bcast((1,))] + [bcast((T, P))] * 10
+        in_specs = ([bcast((1,)), bcast((G,))] + [bcast((G * T, P))] * 10
                     + [bcast((isa.N_OPS,))] * 2 + [bcast((isa.N_SRC_KINDS,))]
-                    + [lane(len(HW_INT_FIELDS)), lane1] + state_specs)
+                    + [lane(len(HW_INT_FIELDS)), lane1, lane1] + state_specs)
         out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in
                      (mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec)]
         return pl.pallas_call(
             kern, grid=grid, in_specs=in_specs, out_specs=state_specs,
             out_shape=out_shape, interpret=interpret,
-        )(start, ops_t, dest_t, srcA_t, srcB_t, imm_t, isld_t, isst_t,
-          wr_t, kA_t, kB_t, p_dec, p_act, e_src, hw_i, hw_f,
+        )(start, plen, *tabs, *prof, hw_i, hw_f, gidx,
           mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec)
 
     @jax.jit
-    def _fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
+    def _fn(tabs, plen, prof, mem_init: jnp.ndarray, hw: HwConfig,
+            prog_idx) -> "SweepResult":
+        TRACE_COUNTS["pallas"] += 1       # trace-time only: retrace probe
         mem0 = jnp.asarray(mem_init, jnp.int32)
         B = mem0.shape[0]
         Bp = -(-B // blk_b) * blk_b
@@ -111,6 +101,7 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
              for f in HW_INT_FIELDS], axis=1), fill=1)
         hw_f = padb(jnp.asarray(hw.smul_power_scale,
                                 jnp.float32).reshape(B), fill=1)
+        gidx = padb(jnp.asarray(prog_idx, jnp.int32).reshape(B))
         state = (
             padb(mem0),                                       # mem
             jnp.zeros((Bp, 4, P), jnp.int32),                 # regs
@@ -130,7 +121,8 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
         def body(c):
             t0, st = c
             start = jnp.full((1,), t0, jnp.int32)
-            st = _chunk_call(Bp, start, hw_i, hw_f, *st)
+            st = _chunk_call(Bp, start, tabs, plen, prof, hw_i, hw_f, gidx,
+                             *st)
             return (t0 + K, tuple(st))
 
         _, st = jax.lax.while_loop(cond, body, (jnp.int32(0), state))
@@ -140,21 +132,77 @@ def make_pallas_sweep_fn(program: Program, profile: Profile, *,
         # clock period comes from the characterization profile, exactly as
         # in the XLA backend and the trace estimator (hw.t_clk_ns is not
         # consulted by either)
-        t_clk = jnp.float32(np.asarray(profile.t_clk_ns))
-        energy_pj = e_uwcc * t_clk * 1e-3
+        energy_pj = e_uwcc * jnp.float32(t_clk) * 1e-3
         power_mw = e_uwcc / jnp.maximum(lat_cc, 1) * 1e-3
         weights = (jnp.arange(M, dtype=jnp.int32) | 1)[None, :]
         checksum = (mem[:B] * weights).sum(axis=1).astype(jnp.int32)
         return SweepResult(lat_cc, energy_pj, power_mw, checksum,
                            n_exec[:B])
 
-    if not validate:
-        # driver (dse.sweep) pre-checked its configs against max_banks
-        return _fn
+    return _fn
 
-    def fn(mem_init: jnp.ndarray, hw: HwConfig) -> "SweepResult":
-        validate_bank_bound(hw.n_banks, max_banks,
-                            where="cgra_sweep (backend='pallas')")
-        return _fn(mem_init, hw)
+
+def make_pallas_sweep_fn(program, profile: Profile, *,
+                         rows: int = 4, cols: int = 4, mem_size: int = 4096,
+                         max_steps: int = 2048,
+                         chunk_steps: Optional[int] = 64,
+                         blk_b: int = 32,
+                         interpret: Optional[bool] = None,
+                         max_banks: int = DEFAULT_MAX_BANKS,
+                         validate: bool = True):
+    """Build the Pallas-backed sweep function (see module docstring).
+
+    program: ``Program`` (single-kernel API, ``fn(mem, hw)``) or a
+    sequence / ``ProgramBatch`` (``fn(mem, hw, prog_idx)``)."""
+    single = isinstance(program, Program)
+    batch = as_program_batch(program)
+    tables = batch_tables(batch)
+    P = batch.n_pes
+    if P != rows * cols:
+        raise ValueError(
+            f"program batch {batch.names!r}: n_pes={P} does not match "
+            f"the {rows}x{cols} array")
+    T = batch.t_max
+    G = batch.n_programs
+    K = max(1, min(chunk_steps or max_steps, max_steps))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # Stacked program tables flattened to (G*T, P): one HBM read per tile,
+    # every lane gathers its kernel's rows by prog_idx * T + pc.
+    flat = lambda x, dt: jnp.asarray(x, dt).reshape(G * T, P)
+    tabs = (flat(tables.ops, jnp.int32), flat(tables.dest, jnp.int32),
+            flat(tables.srcA, jnp.int32), flat(tables.srcB, jnp.int32),
+            flat(tables.imm, jnp.int32), flat(tables.is_load, jnp.int32),
+            flat(tables.is_store, jnp.int32),
+            flat(tables.writes_rout, jnp.int32),
+            flat(tables.kindA, jnp.int32), flat(tables.kindB, jnp.int32))
+    plen = jnp.asarray(batch.n_instrs, jnp.int32)          # (G,)
+    prof = (jnp.asarray(profile.p_dec, jnp.float32),
+            jnp.asarray(profile.p_act, jnp.float32),
+            jnp.asarray(profile.e_src, jnp.float32))
+
+    core = _pallas_sweep_core(
+        rows, cols, mem_size, T, G, K, max_steps, max_banks, blk_b,
+        bool(interpret),
+        float(np.asarray(profile.p_idle)),
+        float(np.asarray(profile.e_sw_op)),
+        float(np.asarray(profile.e_sw_mux)),
+        float(np.asarray(profile.mulzero)),
+        float(np.asarray(profile.t_clk_ns)))
+
+    if single:
+        def fn(mem_init: jnp.ndarray, hw: HwConfig):
+            if validate:
+                validate_bank_bound(hw.n_banks, max_banks,
+                                    where="cgra_sweep (backend='pallas')")
+            gi = jnp.zeros((jnp.shape(mem_init)[0],), jnp.int32)
+            return core(tabs, plen, prof, mem_init, hw, gi)
+    else:
+        def fn(mem_init: jnp.ndarray, hw: HwConfig, prog_idx):
+            if validate:
+                validate_bank_bound(hw.n_banks, max_banks,
+                                    where="cgra_sweep (backend='pallas')")
+            return core(tabs, plen, prof, mem_init, hw, prog_idx)
 
     return fn

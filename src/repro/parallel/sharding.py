@@ -191,15 +191,23 @@ def constrain(x, *logical: Optional[str]):
 
 
 # ---------------------------------------------------------------------------
-# Flat-batch sweep sharding: the DSE (hw x data) grid is one long batch
-# axis spread over EVERY axis of whatever mesh the caller brings ((data,),
-# (pod, data, model), ...).  Shared by the pjit'ed XLA sweep path and the
-# shard_map'ed Pallas sweep path (core/dse.py).
+# Flat-batch sweep sharding: the DSE (program x hw x data) grid is one
+# long batch axis spread over EVERY axis of whatever mesh the caller
+# brings ((data,), (pod, data, model), ...).  Shared by the pjit'ed XLA
+# sweep path and the shard_map'ed Pallas sweep path (core/dse.py): the
+# per-lane index vectors (img_idx, prog_idx) and the stacked HwConfig
+# leaves all shard with flat_batch_spec, while the gathered-by-index
+# payloads (memory images, packed program tables) stay replicated.
 # ---------------------------------------------------------------------------
 
 def flat_batch_spec(mesh: Mesh) -> P:
     """PartitionSpec sharding a leading batch axis over all mesh axes."""
     return P(tuple(mesh.axis_names))
+
+
+def padded_len(n: int, n_devices: int) -> int:
+    """Smallest multiple of ``n_devices`` >= n (flat-grid pad target)."""
+    return -(-n // n_devices) * n_devices
 
 
 def batch_sharding(mesh: Mesh) -> NamedSharding:

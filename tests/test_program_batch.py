@@ -1,0 +1,297 @@
+"""Program-as-data: packing, validation, and the (program x hw x data)
+grid.
+
+The tentpole property: ``dse.sweep(programs=[...])`` runs G kernels of
+different lengths through ONE compiled executable per backend --
+bit-identical to the per-program python loop it replaces, with no
+retrace across programs (``dse.TRACE_COUNTS`` deltas), unsharded and
+mesh-sharded, and cross-checked against the independent trace-based
+estimator.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import dse, estimator
+from repro.core.cgra import run_program
+from repro.core.hwconfig import TOPOLOGIES, baseline, stack_configs
+from repro.core.isa import OP, asm
+from repro.core.program import (Program, ProgramBuilder, as_program_batch,
+                                pack_programs)
+
+MEM = 256
+MAX_STEPS = 48
+
+
+def _loop_program(iters, name, stride=1):
+    pb = ProgramBuilder(16, name)
+    pb.instr({0: asm("MV", "R1", "IMM", imm=iters)})
+    top = pb.instr({0: asm("SADD", "R0", "R0", "IMM", imm=stride),
+                    3: asm("SADD", "R0", "R0", "IMM", imm=3)})
+    pb.instr({0: asm("SWI", a="R0", b="R0"),
+              3: asm("SWI", a="R0", b="R0"),
+              7: asm("SMUL", "R2", "RCL", "IMM", imm=5)})
+    pb.instr({0: asm("BLT", a="R0", b="R1", imm=top)})
+    pb.exit()
+    return pb.build()
+
+
+def _short_program(name, addr=7):
+    """A 3-instruction straightline kernel (mixed-length packing)."""
+    pb = ProgramBuilder(16, name)
+    pb.instr({0: asm("SADD", "R0", "R0", "IMM", imm=2),
+              5: asm("LWD", "R1", imm=addr)})
+    pb.instr({1: asm("SWD", a="R0", imm=addr)})
+    pb.exit()
+    return pb.build()
+
+
+def _mixed_programs():
+    return [_loop_program(10, "long"), _short_program("short"),
+            _loop_program(4, "mid", stride=2)]
+
+
+def _images():
+    return np.stack([np.zeros(MEM, np.int32),
+                     np.arange(MEM, dtype=np.int32)])
+
+
+def _backend_kw(backend):
+    return dict(mem_size=MEM, max_steps=MAX_STEPS, backend=backend,
+                interpret=True if backend == "pallas" else None, blk_b=4)
+
+
+# ---------------------------------------------------------------------------
+# pack_programs / ProgramBatch mechanics
+# ---------------------------------------------------------------------------
+
+def test_pack_programs_pads_and_roundtrips():
+    progs = _mixed_programs()
+    batch = pack_programs(progs)
+    assert batch.n_programs == 3
+    assert batch.t_max == max(p.n_instrs for p in progs)
+    assert batch.n_pes == 16
+    assert batch.names == ("long", "short", "mid")
+    np.testing.assert_array_equal(batch.n_instrs,
+                                  [p.n_instrs for p in progs])
+    for g, p in enumerate(progs):
+        q = batch.program(g)
+        np.testing.assert_array_equal(q.ops, p.ops)
+        np.testing.assert_array_equal(q.imm, p.imm)
+        # padding beyond the true length is NOPs
+        assert (batch.ops[g, p.n_instrs:] == OP["NOP"]).all()
+
+
+def test_as_program_batch_coercions():
+    p = _short_program("solo")
+    assert as_program_batch(p).n_programs == 1
+    assert as_program_batch([p, p]).n_programs == 2
+    b = pack_programs([p])
+    assert as_program_batch(b) is b
+
+
+def test_pack_programs_rejects_bad_input():
+    with pytest.raises(ValueError, match="empty"):
+        pack_programs([])
+    with pytest.raises(ValueError, match="expected Program"):
+        pack_programs([object()])
+    p16 = _short_program("p16")
+    p4 = ProgramBuilder(4, "p4")
+    p4.exit()
+    with pytest.raises(ValueError, match="n_pes"):
+        pack_programs([p16, p4.build()])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: validation raises ValueError (survives python -O), with the
+# program name and the offending field/range in the message
+# ---------------------------------------------------------------------------
+
+def test_validate_raises_value_error_on_bad_field():
+    p = _short_program("badops")
+    ops = p.ops.copy()
+    ops[0, 0] = 99                              # no such opcode
+    bad = Program(ops, p.dest, p.srcA, p.srcB, p.imm, name="badops")
+    with pytest.raises(ValueError, match=r"'badops'.*'ops'.*out of range"):
+        bad.validate()
+
+
+def test_validate_raises_value_error_on_branch_target():
+    pb = ProgramBuilder(16, "badbr")
+    pb.instr({0: asm("BNE", a="R0", b="ZERO", imm=5)})   # target beyond end
+    with pytest.raises(ValueError, match=r"'badbr'.*branch target"):
+        pb.build()
+
+
+def test_pack_programs_revalidates():
+    good = _short_program("good")
+    p = _short_program("evil")
+    ops = p.ops.copy()
+    ops[0, 0] = -1
+    evil = Program(ops, p.dest, p.srcA, p.srcB, p.imm, name="evil")
+    with pytest.raises(ValueError, match="'evil'"):
+        pack_programs([good, evil])
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: packed == single-program path / per-program loop, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_packed_single_program_identical_to_single_path(backend, profile):
+    """pack_programs([p]) swept as a batch must be bit-identical to the
+    original single-program sweep."""
+    p = _loop_program(10, "loop")
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    kw = _backend_kw(backend)
+    mems = _images()
+    ref = dse.sweep(p, profile, hws, mems, **kw)
+    got = dse.sweep(programs=[p], profile=profile, hw_configs=hws,
+                    mem_images=mems, **kw)
+    np.testing.assert_array_equal(np.asarray(ref.latency_cc),
+                                  np.asarray(got.latency_cc))
+    np.testing.assert_array_equal(np.asarray(ref.checksum),
+                                  np.asarray(got.checksum))
+    np.testing.assert_array_equal(np.asarray(ref.steps_executed),
+                                  np.asarray(got.steps_executed))
+    np.testing.assert_allclose(np.asarray(ref.energy_pj),
+                               np.asarray(got.energy_pj), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mesh_shape", [None, (1,)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_packed_grid_matches_per_program_loop(backend, mesh_shape, profile):
+    """The flattened G*H*D grid == concatenated per-program sweeps,
+    bit-identical on both backends, unsharded and mesh-sharded."""
+    progs = _mixed_programs()
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    mems = _images()
+    kw = _backend_kw(backend)
+    mesh = (None if mesh_shape is None
+            else jax.make_mesh(mesh_shape, ("data",)))
+    got = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                    mem_images=mems, mesh=mesh, **kw)
+    parts = [dse.sweep(p, profile, hws, mems, **kw) for p in progs]
+    ref = jax.tree.map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *parts)
+    assert np.asarray(got.latency_cc).shape == (len(progs) * len(hws) * 2,)
+    np.testing.assert_array_equal(np.asarray(got.latency_cc),
+                                  ref.latency_cc)
+    np.testing.assert_array_equal(np.asarray(got.checksum), ref.checksum)
+    np.testing.assert_array_equal(np.asarray(got.steps_executed),
+                                  ref.steps_executed)
+    np.testing.assert_allclose(np.asarray(got.energy_pj), ref.energy_pj,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_packed_grid_matches_trace_estimator(backend, profile):
+    """Every program of a mixed-length batch must match its own
+    independent trace-based case-(vi) estimate (third code path)."""
+    progs = _mixed_programs()
+    hw = baseline()
+    mems = np.zeros((1, MEM), np.int32)
+    got = dse.sweep(programs=progs, profile=profile, hw_configs=[hw],
+                    mem_images=mems, **_backend_kw(backend))
+    for g, p in enumerate(progs):
+        final, trace = run_program(p, mems[0], hw, max_steps=MAX_STEPS,
+                                   mem_size=MEM)
+        ref = estimator.estimate(p, trace, profile, hw, "vi", mem_size=MEM)
+        assert int(np.asarray(got.latency_cc)[g]) == ref.latency_cc, p.name
+        np.testing.assert_allclose(float(np.asarray(got.energy_pj)[g]),
+                                   ref.energy_pj, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: no retrace across programs (one executable per backend)
+# ---------------------------------------------------------------------------
+
+def _run_fn(fn, progs, hws, profile):
+    G, H = len(progs), len(hws)
+    mems = np.zeros((G * H, MEM), np.int32)
+    hw_b = stack_configs([h for h in hws for _ in range(G)])
+    gi = np.tile(np.arange(G, dtype=np.int32), H)
+    return jax.block_until_ready(
+        fn(mems, hw_b, gi))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_no_retrace_across_programs(backend, profile):
+    """G mixed-length kernels sweep through one compiled executable (at
+    most one trace), and a *different* kernel set of the same padded
+    shape re-uses it with zero new traces."""
+    hws = [baseline(), TOPOLOGIES["d_dma_per_pe"]()]
+    kw = _backend_kw(backend)
+    set_a = [_loop_program(10, "a0"), _short_program("a1")]
+    set_b = [_loop_program(3, "b0", stride=2), _short_program("b1", addr=9)]
+    assert (pack_programs(set_a).t_max == pack_programs(set_b).t_max)
+
+    base = dse.TRACE_COUNTS[backend]
+    fn_a = dse.make_sweep_fn(set_a, profile, **kw)
+    _run_fn(fn_a, set_a, hws, profile)
+    after_a = dse.TRACE_COUNTS[backend]
+    assert after_a - base <= 1, "G programs must share one trace"
+
+    fn_b = dse.make_sweep_fn(set_b, profile, **kw)
+    _run_fn(fn_b, set_b, hws, profile)
+    assert dse.TRACE_COUNTS[backend] == after_a, (
+        "same-shape program swap must hit the compiled-executable cache")
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded multi-kernel grid on 8 forced host devices (own process)
+# ---------------------------------------------------------------------------
+
+def test_packed_grid_sharded_8_devices():
+    """Both backends, 8-device mesh, G*H*D not divisible by the device
+    count (padding path): packed grid == per-program loop bit-for-bit."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.apps import mibench
+        from repro.core import dse
+        from repro.core.characterization import default_profile
+        from repro.core.hwconfig import TOPOLOGIES
+
+        profile = default_profile()
+        ks = [mibench.bitcnt(n_words=16), mibench.crc32(n_words=3),
+              mibench.susan_thresh(n_pixels=16)]
+        progs = [k.program for k in ks]
+        hws = [mk() for mk in TOPOLOGIES.values()]      # H=5
+        mems = np.stack([k.mem_init for k in ks])       # D=3 -> B=45 (pad)
+        mesh = jax.make_mesh((8,), ("data",))
+        for backend in ("xla", "pallas"):
+            kw = dict(max_steps=256, backend=backend,
+                      interpret=True if backend == "pallas" else None,
+                      blk_b=2)
+            got = dse.sweep(programs=progs, profile=profile,
+                            hw_configs=hws, mem_images=mems, mesh=mesh,
+                            **kw)
+            parts = [dse.sweep(p, profile, hws, mems, **kw)
+                     for p in progs]
+            ref = jax.tree.map(lambda *xs: np.concatenate(
+                [np.asarray(x) for x in xs]), *parts)
+            assert np.array_equal(np.asarray(got.latency_cc),
+                                  ref.latency_cc), backend
+            assert np.array_equal(np.asarray(got.checksum),
+                                  ref.checksum), backend
+            assert np.array_equal(np.asarray(got.steps_executed),
+                                  ref.steps_executed), backend
+            np.testing.assert_allclose(np.asarray(got.energy_pj),
+                                       ref.energy_pj, rtol=1e-5)
+        print("PACKED_SHARDED_OK")
+    """)
+    root = Path(__file__).resolve().parents[1]
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, cwd=str(root),
+                       env=dict(os.environ, PYTHONPATH=str(root / "src")),
+                       timeout=1200)
+    assert "PACKED_SHARDED_OK" in r.stdout, (r.stdout[-1500:],
+                                             r.stderr[-1500:])
