@@ -1,7 +1,7 @@
 """The "instantaneous result" claim (paper Section 1): design points per
 second through the fused simulate+estimate sweep.
 
-Four comparisons, all machine-readable in BENCH_sim_throughput.json so
+Five comparisons, all machine-readable in BENCH_sim_throughput.json so
 the perf trajectory is trackable across PRs (schema: bench_schema.json,
 validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
@@ -15,7 +15,10 @@ validated in CI by benchmarks.validate_bench):
     steps/sec -- the recompile-per-program cost the program-as-data
     refactor removes;
   * the estimator's memory-contention scheduler: seed S x P Python loop
-    vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16).
+    vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16);
+  * the crash-safe sweep service (service/runner): per-unit checkpoint
+    overhead vs the plain partitioned run, and cold recovery time after
+    a mid-campaign kill vs re-running from scratch (docs/robustness.md).
 
 Steps/sec is *true* steps: ``SweepResult.steps_executed`` counts the
 instructions each design point actually ran (early-exiting kernels stop
@@ -217,12 +220,84 @@ def _bench_mem_completion(rep: Report) -> dict:
                 speedup=speedup)
 
 
+def _bench_recovery(rep: Report) -> dict:
+    """Fault-tolerance lane: what crash-safety costs and buys.
+
+    * checkpoint overhead: the same partitioned campaign with and
+      without per-unit checkpointing (default async saves) -- the
+      steady-state tax of durability (acceptance: small, <10% at the
+      default unit size);
+    * recovery: kill the campaign halfway (simulated by pre-populating
+      half the unit checkpoints), then time a cold resume-and-finish --
+      versus re-running the whole campaign from scratch.
+    """
+    import tempfile
+
+    from repro.service import ResumableSweepRunner
+
+    prof = default_profile()
+    ks = _multi_kernels()
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    mems = np.stack([np.asarray(k.mem_init) for k in ks])
+    max_steps = max(k.max_steps for k in ks)
+    unit_size = 4 if SMOKE else 8
+    kw = dict(programs=[k.program for k in ks], profile=prof,
+              hw_configs=hws, mem_images=mems, unit_size=unit_size,
+              max_steps=max_steps)
+
+    ResumableSweepRunner(**kw).run()                   # compile warmup
+    t_plain = timeit(lambda: ResumableSweepRunner(**kw).run(),
+                     repeats=3, warmup=0)
+
+    def run_ckpt():
+        with tempfile.TemporaryDirectory() as d:
+            ResumableSweepRunner(ckpt_dir=d, **kw).run()
+    t_ckpt = timeit(run_ckpt, repeats=3, warmup=0)
+    overhead_pct = max(t_ckpt - t_plain, 0.0) / t_plain * 100.0
+
+    # crash at the halfway unit, then cold resume-and-finish
+    runner = ResumableSweepRunner(**kw)
+    half = runner.n_units // 2
+    with tempfile.TemporaryDirectory() as d:
+        pre = ResumableSweepRunner(ckpt_dir=d, **kw)
+        for k_ in range(half):
+            pre.run_unit(k_)
+        pre.mgr.wait()
+
+        import time as _time
+        t0 = _time.perf_counter()
+        resumed = ResumableSweepRunner(ckpt_dir=d, **kw)
+        _, resume_rep = resumed.run()
+        t_recover = _time.perf_counter() - t0
+    assert resume_rep.units_resumed == half
+
+    B = runner.B
+    rec = dict(B=B, unit_size=unit_size, units=runner.n_units,
+               backend="xla",
+               plain_seconds=t_plain, checkpointed_seconds=t_ckpt,
+               checkpoint_overhead_pct=overhead_pct,
+               killed_at_unit=half, resumed_units=half,
+               recomputed_units=runner.n_units - half,
+               recovery_seconds=t_recover,
+               recovery_vs_rerun=t_plain / max(t_recover, 1e-9))
+    rep.add(path="recovery_checkpointed_sweep", B=B,
+            seconds_per_batch=t_ckpt, points_per_s=B / t_ckpt,
+            steps_per_s=B / t_ckpt, speedup_vs_single=1.0,
+            checkpoint_overhead_pct=overhead_pct)
+    rep.add(path="recovery_resume_after_kill", B=B,
+            seconds_per_batch=t_recover, points_per_s=B / t_recover,
+            steps_per_s=B / t_recover,
+            speedup_vs_single=rec["recovery_vs_rerun"])
+    return rec
+
+
 def run() -> Report:
     rep = Report("sim_throughput (design points / second)")
     rows: list = []
     _bench_backends(rep, rows)
     mk_rec = _bench_multi_kernel(rep)
     mem_rec = _bench_mem_completion(rep)
+    rec_rec = _bench_recovery(rep)
     payload = dict(
         benchmark="sim_throughput",
         jax_backend=jax.default_backend(),
@@ -231,6 +306,7 @@ def run() -> Report:
         sweep=rows,
         multi_kernel=mk_rec,
         mem_completion=mem_rec,
+        recovery=rec_rec,
     )
     JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"[bench] wrote {JSON_PATH}" + (" (smoke mode)" if SMOKE else ""))

@@ -1,0 +1,94 @@
+"""Crash-safe DSE campaign: kill it mid-sweep, resume, lose nothing.
+
+A realistic failure drill for the sweep service (``repro.service``):
+
+  1. launch a checkpointed sweep campaign in a subprocess with a fault
+     plan that SIGKILLs the process right before one unit's checkpoint
+     commit -- the worst crash window (work computed, not yet durable);
+  2. resume in a fresh process: completed units load from their atomic
+     checkpoints, only the killed unit re-executes;
+  3. verify the stitched result is bit-identical to a never-interrupted
+     campaign;
+  4. rerun the campaign with the compiled Pallas stage persistently
+     broken (injected): every unit degrades down the backend chain
+     (pallas -> pallas interpret -> xla) instead of failing the
+     campaign, and the report says which units degraded.
+
+  PYTHONPATH=src python examples/resumable_sweep.py
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.apps import mibench
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import TOPOLOGIES
+from repro.runtime.faults import (FAULT_PLAN_ENV, FaultInjector, FaultPlan)
+from repro.service import ResumableSweepRunner
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def cli(out, ckpt=None, fault_plan=None, report=None):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    if fault_plan is not None:
+        env[FAULT_PLAN_ENV] = fault_plan.to_json()
+    args = [sys.executable, "-m", "repro.service",
+            "--kernels", "bitcnt,crc32,sha", "--unit-size", "3",
+            "--max-steps", "512", "--out", str(out)]
+    if ckpt:
+        args += ["--ckpt-dir", str(ckpt)]
+    if report:
+        args += ["--report-out", str(report)]
+    return subprocess.run(args, env=env, cwd=str(REPO))
+
+
+with tempfile.TemporaryDirectory() as tmp:
+    tmp = Path(tmp)
+
+    # 1. kill the campaign right before unit 2's checkpoint commit
+    r = cli(tmp / "dead.npz", ckpt=tmp / "ck",
+            fault_plan=FaultPlan(kill_at_unit=2))
+    assert r.returncode == -9, f"expected SIGKILL, got {r.returncode}"
+    print(f"\n[1] campaign SIGKILLed mid-sweep (rc={r.returncode}); "
+          f"checkpoints survive: "
+          f"{sorted(p.name for p in (tmp / 'ck').glob('step_*'))}")
+
+    # 2. resume: completed units load, only the killed unit re-runs
+    r = cli(tmp / "resumed.npz", ckpt=tmp / "ck", report=tmp / "rep.json")
+    assert r.returncode == 0
+    rep = json.loads((tmp / "rep.json").read_text())
+    print(f"[2] resumed: {rep['units_resumed']} units from checkpoint, "
+          f"{rep['units_run']} re-executed, wall {rep['wall_s']:.2f}s")
+
+    # 3. bit-identical to a never-interrupted campaign
+    r = cli(tmp / "solo.npz")
+    assert r.returncode == 0
+    a, b = np.load(tmp / "resumed.npz"), np.load(tmp / "solo.npz")
+    for f in a.files:
+        np.testing.assert_array_equal(a[f], b[f], err_msg=f)
+    print("[3] stitched result bit-identical to an uninterrupted run "
+          f"({a['latency_cc'].size} lanes, all fields)")
+
+# 4. persistent Pallas failure -> graceful degradation, in-process
+ks = [mibench.bitcnt(n_words=16), mibench.crc32(n_words=3)]
+hws = [mk() for mk in TOPOLOGIES.values()]
+inj = FaultInjector(FaultPlan(seed=1, transient_rate=0.2,
+                              broken_backends=("pallas",)))
+runner = ResumableSweepRunner(
+    programs=[k.program for k in ks], profile=default_profile(),
+    hw_configs=hws, mem_images=np.stack([k.mem_init for k in ks]),
+    unit_size=4, max_steps=512, backend="pallas", injector=inj,
+    sleep=lambda s: None)
+res, rep = runner.run()
+assert len(rep.degraded) == rep.units_total
+print(f"\n[4] chaos campaign (20% transients + pallas stage broken): "
+      f"completed all {rep.units_total} units in {rep.attempts_total} "
+      f"attempts; degraded units -> "
+      f"{sorted(set(rep.degraded.values()))}")
+print("\nok: crash-safe, degradable, bit-identical")

@@ -311,6 +311,116 @@ def make_sweep_fn(program: Union[Program, ProgramBatch, Sequence[Program]],
     return fn
 
 
+class GridPlan(NamedTuple):
+    """The flattened (program x hardware x data) grid as *data*: packed
+    program batch, the D distinct images, and per-lane index/config rows.
+    Index arrays live on the host (numpy) so any contiguous slice of
+    lanes -- a work unit of the resumable sweep runner
+    (``service.runner``) -- is a cheap row slice, never a re-plan."""
+    batch: ProgramBatch
+    images: jnp.ndarray        # (D, M) int32, device-resident once
+    img_idx: np.ndarray        # (B,) int32 per-lane image row
+    prog_idx: np.ndarray       # (B,) int32 per-lane program row
+    hw_grid: HwConfig          # batched leaves, (B,) each
+    max_banks: int             # config-derived scoreboard bound
+
+    @property
+    def n_lanes(self) -> int:
+        return int(self.img_idx.shape[0])
+
+
+def plan_grid(program: Union[Program, ProgramBatch, Sequence[Program], None]
+              = None, hw_configs: Sequence[HwConfig] = None,
+              mem_images: np.ndarray = None, *,
+              programs: Optional[Sequence[Program]] = None) -> GridPlan:
+    """Flatten the (program x hw x data) grid to ``B = G*H*D`` index rows
+    (row ``(g*H + h)*D + d``) without materializing any tiled images or
+    tables.  ``sweep()`` consumes the whole plan in one call; the sweep
+    service slices it into checkpointable work units."""
+    if programs is not None:
+        if program is not None:
+            raise TypeError("plan_grid(): pass either program or "
+                            "programs=, not both")
+        program = list(programs)
+    batch = as_program_batch(program)
+    G = batch.n_programs
+    H, D = len(hw_configs), mem_images.shape[0]
+    n_banks_req = max(int(np.asarray(c.n_banks)) for c in hw_configs)
+    max_banks = scoreboard_bound(max(n_banks_req, DEFAULT_MAX_BANKS))
+    hw_b = stack_configs(list(hw_configs))
+    # broadcast to the full flat grid: hw h repeats over the data axis,
+    # then the (hw x data) block tiles over the program axis
+    hw_grid = jax.tree.map(
+        lambda x: jnp.tile(jnp.repeat(x, D, axis=0), G), hw_b)
+    images = jnp.asarray(mem_images, jnp.int32)          # (D, M), one copy
+    img_idx = np.tile(np.arange(D, dtype=np.int32), G * H)      # (G*H*D,)
+    prog_idx = np.repeat(np.arange(G, dtype=np.int32), H * D)
+    return GridPlan(batch, images, img_idx, prog_idx, hw_grid, max_banks)
+
+
+def make_grid_fn(plan: GridPlan, profile: Profile, *,
+                 max_steps: int = 2048, mem_size: int = 4096,
+                 backend: str = "xla", chunk_steps: Optional[int] = 64,
+                 blk_b: int = 32, interpret: Optional[bool] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+    """Unit-sliceable sweep core: ``fn(img_idx, hw_slice, prog_idx) ->
+    SweepResult`` for ANY contiguous (or gathered) slice of the planned
+    grid.  The underlying executable is the lru-cached operand core, so
+    every same-length slice -- every work unit of a partitioned sweep --
+    reuses one compiled program per backend (zero retrace), and a lane's
+    result is bit-identical whether it runs in a monolithic sweep or
+    inside any unit partition (lanes are independent).
+
+    With ``mesh`` the slice runs SPMD over its devices (shard_map for
+    the Pallas engine, pjit for XLA, as in ``sweep``); slice lengths
+    must then divide the device count -- the sweep runner pads its
+    units accordingly."""
+    fn = make_sweep_fn(plan.batch, profile, max_steps=max_steps,
+                       mem_size=mem_size, backend=backend,
+                       chunk_steps=chunk_steps, blk_b=blk_b,
+                       interpret=interpret, max_banks=plan.max_banks,
+                       validate=False)
+    images = plan.images
+    if mesh is None:
+        def grid_fn(idx, hw, gi):
+            return fn(jnp.take(images, jnp.asarray(idx, jnp.int32), axis=0),
+                      hw, jnp.asarray(gi, jnp.int32))
+        return grid_fn
+
+    from ..parallel.sharding import (batch_sharding, flat_batch_spec,
+                                     replicated_sharding)
+    if backend == "pallas":
+        from jax.sharding import PartitionSpec
+
+        def shard_fn(imgs, idx, gi, hw):
+            return fn(jnp.take(imgs, idx, axis=0), hw, gi)
+
+        sharded = jax.jit(_shard_map(
+            shard_fn, mesh,
+            in_specs=(PartitionSpec(), flat_batch_spec(mesh),
+                      flat_batch_spec(mesh), flat_batch_spec(mesh)),
+            out_specs=flat_batch_spec(mesh)))
+
+        def grid_fn(idx, hw, gi):
+            return sharded(images, jnp.asarray(idx, jnp.int32),
+                           jnp.asarray(gi, jnp.int32), hw)
+        return grid_fn
+
+    sh = batch_sharding(mesh)
+    rep = replicated_sharding(mesh)
+    jitted = jax.jit(
+        lambda idx, hw, gi: fn(jnp.take(images, idx, axis=0), hw, gi),
+        in_shardings=(sh, jax.tree.map(lambda _: sh, plan.hw_grid), sh),
+        out_shardings=rep)
+
+    def grid_fn(idx, hw, gi):
+        idx = jax.device_put(jnp.asarray(idx, jnp.int32), sh)
+        gi = jax.device_put(jnp.asarray(gi, jnp.int32), sh)
+        hw = jax.tree.map(lambda x: jax.device_put(x, sh), hw)
+        return jitted(idx, hw, gi)
+    return grid_fn
+
+
 def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
           = None, profile: Profile = None,
           hw_configs: Sequence[HwConfig] = None,
@@ -355,32 +465,20 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     the configs (padded to a power of two); configs beyond the hard
     ceiling fail with an assertion instead of silently aliasing.
     """
-    if programs is not None:
-        if program is not None:
-            raise TypeError("sweep(): pass either program or programs=, "
-                            "not both")
-        program = list(programs)
-    batch = as_program_batch(program)
+    plan = plan_grid(program, hw_configs, mem_images, programs=programs)
+    batch = plan.batch
     G = batch.n_programs
     H, D = len(hw_configs), mem_images.shape[0]
-    # config-derived scoreboard bound (>= the 16-slot default so common
-    # sweeps share compile caches; hard ceiling asserted inside)
-    n_banks_req = max(int(np.asarray(c.n_banks)) for c in hw_configs)
-    max_banks = scoreboard_bound(max(n_banks_req, DEFAULT_MAX_BANKS))
-    hw_b = stack_configs(list(hw_configs))
-    # broadcast to the full flat grid: hw h repeats over the data axis,
-    # then the (hw x data) block tiles over the program axis
-    hw_grid = jax.tree.map(
-        lambda x: jnp.tile(jnp.repeat(x, D, axis=0), G), hw_b)
-    images = jnp.asarray(mem_images, jnp.int32)          # (D, M), one copy
-    img_idx = jnp.tile(jnp.arange(D, dtype=jnp.int32), G * H)   # (G*H*D,)
-    prog_idx = jnp.repeat(jnp.arange(G, dtype=jnp.int32), H * D)
-    # validate=False: every config was just checked against the derived
-    # bound above, so no runtime guard needs to be staged into the
+    images = plan.images
+    img_idx = jnp.asarray(plan.img_idx)
+    prog_idx = jnp.asarray(plan.prog_idx)
+    hw_grid = plan.hw_grid
+    # validate=False: every config was checked against the plan's derived
+    # scoreboard bound, so no runtime guard needs to be staged into the
     # compiled sweep
     kw = dict(max_steps=max_steps, mem_size=mem_size, backend=backend,
               chunk_steps=chunk_steps, blk_b=blk_b, interpret=interpret,
-              max_banks=max_banks, validate=False)
+              max_banks=plan.max_banks, validate=False)
     if G == 1:
         # single-kernel grid: the constant-closure fast path (prog_idx
         # is all zeros anyway)

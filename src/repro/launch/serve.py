@@ -65,15 +65,22 @@ class Server:
 
     def step(self):
         """One decode step for every active slot."""
-        index = jnp.asarray(int(self.lengths.max()), jnp.int32)
+        act = self.active
+        if not act.any():
+            return
+        # positions of retired/empty slots must not move: a stale slot's
+        # length would otherwise creep past the write index of the next
+        # request spliced into it (and drag the shared decode index with
+        # it, clobbering cache rows beyond every live request)
+        index = jnp.asarray(int(self.lengths[act].max()), jnp.int32)
         logits, self.caches = self.decode(self.params, self.tokens,
                                           self.caches, index)
         self.key, k = jax.random.split(self.key)
         nxt = sample(logits[:, -1], k, self.temperature)
         self.tokens = nxt[:, None].astype(jnp.int32)
-        self.lengths += 1
+        self.lengths[act] += 1
         for s in range(self.slots):
-            if self.active[s]:
+            if act[s]:
                 self.outputs[s].append(int(nxt[s]))
 
 

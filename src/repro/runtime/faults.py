@@ -1,0 +1,130 @@
+"""Deterministic, seed-driven fault injection for the sweep service.
+
+Real DSE campaigns die to transient device errors, stuck backends, slow
+hosts and plain SIGKILLs; none of those are reproducible in CI on real
+hardware.  This module makes every recovery path of the resumable sweep
+runner (``service/runner.py``) exercisable *deterministically*: each
+injected fault is a pure function of ``(seed, unit, attempt)``, so a
+chaos run replays bit-for-bit regardless of wall clock, retry timing or
+execution order.
+
+Fault classes covered (mirroring the failure model in
+``docs/robustness.md``):
+
+  * **transient unit failure** -- an attempt raises ``TransientFault``;
+    the runner's retry/backoff policy must absorb it.  Capped per unit
+    (``max_transient_per_unit``) so campaigns terminate by construction.
+  * **persistent backend failure** -- every attempt on a listed backend
+    stage raises ``BackendFault``; the runner must degrade through its
+    backend chain (pallas -> pallas interpret -> xla).
+  * **slow unit** -- synthetic extra seconds attributed to a unit's
+    execution, feeding the straggler detector without real sleeping.
+  * **process kill point** -- ``SIGKILL`` to our own pid right before a
+    unit's checkpoint commit: the crash window where work is computed
+    but not yet durable, so resume must recompute exactly that unit.
+  * **dead node** -- a heartbeat node goes silent from a given unit on,
+    driving the failure-detector -> elastic-replan path.
+
+``FaultPlan`` serializes to JSON (``to_json``/``from_json``) and rides
+the ``REPRO_FAULT_PLAN`` environment variable into subprocesses, so
+kill-and-resume tests configure the child's faults without new flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+FAULT_PLAN_ENV = "REPRO_FAULT_PLAN"
+
+
+class TransientFault(RuntimeError):
+    """Injected recoverable failure (retry should absorb it)."""
+
+
+class BackendFault(RuntimeError):
+    """Injected persistent backend failure (degrade, don't retry)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault schedule; see module docstring for semantics."""
+    seed: int = 0
+    transient_rate: float = 0.0            # P(attempt fails) per attempt
+    max_transient_per_unit: int = 2        # termination guarantee
+    broken_backends: Tuple[str, ...] = ()  # stage names, e.g. ("pallas",)
+    slow_units: Tuple[int, ...] = ()
+    slow_extra_s: float = 0.0
+    kill_at_unit: Optional[int] = None     # SIGKILL before this commit
+    dead_nodes: Tuple[Tuple[int, str], ...] = ()  # (from_unit, node)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        d = json.loads(text)
+        d["broken_backends"] = tuple(d.get("broken_backends", ()))
+        d["slow_units"] = tuple(d.get("slow_units", ()))
+        d["dead_nodes"] = tuple(
+            (int(u), str(n)) for u, n in d.get("dead_nodes", ()))
+        return cls(**d)
+
+    @classmethod
+    def from_env(cls, env: str = FAULT_PLAN_ENV) -> Optional["FaultPlan"]:
+        text = os.environ.get(env, "")
+        return cls.from_json(text) if text else None
+
+
+class FaultInjector:
+    """Stateful applier of a ``FaultPlan``.
+
+    The only state is the per-unit transient counter (the cap); every
+    fault decision itself is recomputed from ``(seed, unit, attempt)``.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._transients: Dict[int, int] = {}
+
+    # -- execution faults ---------------------------------------------------
+    def on_attempt(self, unit: int, attempt: int, backend: str):
+        """Raise the injected fault for this (unit, attempt, backend), if
+        any.  Called by the runner right before executing an attempt."""
+        if backend in self.plan.broken_backends:
+            raise BackendFault(
+                f"injected persistent failure: backend {backend!r}, "
+                f"unit {unit}")
+        if (self.plan.transient_rate > 0.0
+                and self._transients.get(unit, 0)
+                < self.plan.max_transient_per_unit):
+            rng = np.random.default_rng(
+                [self.plan.seed, unit, attempt])
+            if rng.random() < self.plan.transient_rate:
+                self._transients[unit] = self._transients.get(unit, 0) + 1
+                raise TransientFault(
+                    f"injected transient failure: unit {unit}, "
+                    f"attempt {attempt}")
+
+    def extra_seconds(self, unit: int) -> float:
+        """Synthetic slowness attributed to this unit's wall time."""
+        return (self.plan.slow_extra_s
+                if unit in self.plan.slow_units else 0.0)
+
+    # -- crash point --------------------------------------------------------
+    def on_commit(self, unit: int):
+        """Kill point: fires right *before* the unit's checkpoint commit,
+        the window where the work is computed but not yet durable."""
+        if self.plan.kill_at_unit is not None \
+                and unit == self.plan.kill_at_unit:
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    # -- fleet faults -------------------------------------------------------
+    def node_dead(self, node: str, unit: int) -> bool:
+        """True once `node` has gone silent (stops heartbeating) as of
+        this unit."""
+        return any(unit >= u and node == n for u, n in self.plan.dead_nodes)

@@ -23,6 +23,12 @@ class HeartbeatBus:
     def beat(self, node: str, at: Optional[float] = None):
         self.last[node] = self.clock() if at is None else at
 
+    def register(self, node: str, at: Optional[float] = None):
+        """Record the node's existence without a beat: age counts from
+        registration, so a fresh fleet gets the full timeout as startup
+        grace instead of being born with age == inf."""
+        self.last.setdefault(node, self.clock() if at is None else at)
+
     def age(self, node: str) -> float:
         if node not in self.last:
             return float("inf")
@@ -33,11 +39,24 @@ class HeartbeatBus:
 class FailureDetector:
     """Declares a node failed after `timeout` without a heartbeat, with a
     `suspect_factor * timeout` grace period in between (suspect state lets
-    the scheduler drain work before eviction)."""
+    the scheduler drain work before eviction).  Nodes are registered on
+    the bus at construction: a node that has not beaten yet ages from
+    registration time, not from -inf, so a whole fleet that is still
+    starting up is not evicted at t=0 (it still fails after `timeout` if
+    it never comes up)."""
     bus: HeartbeatBus
     nodes: List[str]
     timeout: float = 10.0
     suspect_factor: float = 0.5
+
+    def __post_init__(self):
+        for n in self.nodes:
+            self.bus.register(n)
+
+    def remove(self, node: str):
+        """Drop an evicted node from the watch list (elastic downscale)."""
+        if node in self.nodes:
+            self.nodes.remove(node)
 
     def status(self, node: str) -> str:
         age = self.bus.age(node)

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -27,16 +27,27 @@ class StragglerPolicy:
 
 class StragglerDetector:
     def __init__(self, nodes: List[str],
-                 policy: StragglerPolicy = StragglerPolicy()):
-        self.nodes = nodes
-        self.policy = policy
+                 policy: Optional[StragglerPolicy] = None):
+        self.nodes = list(nodes)
+        # None -> a fresh policy per detector.  (A `StragglerPolicy()`
+        # default argument would be evaluated once at def time and shared
+        # by every detector -- tuning one would silently retune them all.)
+        self.policy = StragglerPolicy() if policy is None else policy
         self.history: Dict[str, Deque[float]] = {
-            n: collections.deque(maxlen=32) for n in nodes}
-        self.flags: Dict[str, int] = {n: 0 for n in nodes}
+            n: collections.deque(maxlen=32) for n in self.nodes}
+        self.flags: Dict[str, int] = {n: 0 for n in self.nodes}
+
+    def remove(self, node: str):
+        """Drop an evicted/replaced node from the fleet being watched."""
+        if node in self.nodes:
+            self.nodes.remove(node)
+        self.history.pop(node, None)
+        self.flags.pop(node, None)
 
     def record_step(self, times: Dict[str, float]):
         for n, t in times.items():
-            self.history[n].append(t)
+            if n in self.history:       # evicted nodes may still report
+                self.history[n].append(t)
 
     def _latest(self) -> Dict[str, float]:
         return {n: h[-1] for n, h in self.history.items() if h}

@@ -1,0 +1,19 @@
+"""Crash-safe DSE sweep service.
+
+``runner``  -- partitioned, checkpointed, retry/degrade sweep execution
+               (``ResumableSweepRunner``): a killed campaign resumes from
+               the last complete unit, bit-identical to an uninterrupted
+               run.
+``monitor`` -- wires the runtime scaffolding (heartbeats, failure
+               detection, straggler policy, elastic downscale) into the
+               runner.
+``server``  -- minimal sweep service: bounded admission queue with
+               backpressure, same-shape request packing into shared
+               lanes, per-request deadlines, streamed per-unit partials.
+"""
+from .monitor import FleetMonitor
+from .runner import (BackendStage, CheckpointMismatch, ResumableSweepRunner,
+                     RetryPolicy, RunnerReport, SweepUnitError, UnitRecord,
+                     UnitTimeout, backend_chain)
+from .server import (RequestResult, ServiceOverloaded, SweepRequest,
+                     SweepService)

@@ -1,0 +1,5 @@
+"""``python -m repro.service`` -> the resumable sweep runner CLI."""
+from .runner import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""Minimal DSE-sweep service over the resumable runner.
+
+The serving problem for sweeps mirrors the LLM one (``launch/serve.py``):
+many small requests, one expensive compiled engine, so throughput comes
+from batching strangers into shared device work.  The same slot-based
+continuous-batching pattern applies:
+
+  * **bounded admission queue with backpressure**: ``submit`` refuses
+    (``ServiceOverloaded``) past ``queue_max`` instead of buffering
+    unboundedly -- the caller sheds load, the service never OOMs.
+  * **request packing**: queued requests with a compatible shape are
+    packed into ONE merged grid (``pack_programs`` NOP-pads their
+    kernels to a common table shape, images are concatenated and lanes
+    gather by index), so one ``ResumableSweepRunner`` -- one compiled
+    executable -- serves all of them.  Each request owns a contiguous
+    lane span of the merged grid.
+  * **slots**: up to ``slots`` merged campaigns are in flight; ``step``
+    advances each by one work unit (continuous batching at unit
+    granularity).  A finished campaign frees its slot and the next
+    queued pack is admitted.
+  * **per-request deadlines**: an expired request's not-yet-run units
+    are skipped (its lanes stitch as zeros, ``expired`` is flagged);
+    units already computed are still delivered -- partial results beat
+    no results for DSE.
+  * **streamed partials**: every completed unit is pushed to the owning
+    requests' ``on_partial`` callbacks in request-local lane
+    coordinates, so a long campaign renders its Pareto front
+    incrementally.
+
+All fault-tolerance (checkpoint/resume, retry, degradation, fleet
+monitoring) is inherited from the runner underneath.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.characterization import Profile
+from ..core.dse import GridPlan
+from ..core.hwconfig import stack_configs
+from ..core.program import pack_programs
+from .runner import RESULT_FIELDS, ResumableSweepRunner, RetryPolicy
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission queue is full -- shed load upstream and retry later."""
+
+
+@dataclasses.dataclass
+class SweepRequest:
+    """One client's (programs x hw x images) sub-grid."""
+    programs: Sequence
+    hw_configs: Sequence
+    mem_images: np.ndarray                     # (D, mem_size) int32
+    deadline_s: Optional[float] = None         # relative to submission
+    on_partial: Optional[Callable] = None      # (rid, lo, hi, {field: arr})
+    # filled in by the service:
+    rid: int = -1
+    submitted_at: float = 0.0
+
+    @property
+    def n_lanes(self) -> int:
+        return (len(list(self.programs)) * len(self.hw_configs)
+                * int(self.mem_images.shape[0]))
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Final per-request answer: this request's lane span of the merged
+    grid, stitched (skipped units are zero) plus delivery metadata."""
+    rid: int
+    arrays: Dict[str, np.ndarray]              # request-local (n_lanes,)
+    expired: bool
+    degraded_units: Dict[int, str]             # merged-unit -> stage name
+    skipped_lanes: int
+
+
+class _Slot:
+    """One in-flight merged campaign: the runner plus the request
+    boundary map needed to route unit results back to owners."""
+
+    def __init__(self, runner: ResumableSweepRunner,
+                 members: List[Tuple[SweepRequest, int, int]]):
+        self.runner = runner
+        self.members = members                 # (request, lane lo, lane hi)
+        self.expired: set = set()              # rids past deadline
+
+    def requests(self) -> List[SweepRequest]:
+        return [r for r, _, _ in self.members]
+
+
+def _merge_plans(requests: Sequence[SweepRequest]) -> Tuple[
+        GridPlan, List[Tuple[SweepRequest, int, int]]]:
+    """Pack several requests' grids into one ``GridPlan``.
+
+    Programs are NOP-padded to a common table shape, images concatenated;
+    every lane gathers its image and program by index, so the merged grid
+    is just concatenated index rows -- request r's lanes are the
+    contiguous span [lo_r, hi_r) and its numbers are bit-identical to a
+    solo run (lanes are independent)."""
+    all_programs = list(itertools.chain.from_iterable(
+        list(r.programs) for r in requests))
+    batch = pack_programs(all_programs)
+    images = np.concatenate([np.asarray(r.mem_images) for r in requests])
+
+    img_idx, prog_idx, hw_parts, members = [], [], [], []
+    prog_off = img_off = lane_off = 0
+    for r in requests:
+        G = len(list(r.programs))
+        H, D = len(r.hw_configs), int(r.mem_images.shape[0])
+        img_idx.append(np.tile(np.arange(D, dtype=np.int32), G * H)
+                       + img_off)
+        prog_idx.append(np.repeat(np.arange(G, dtype=np.int32), H * D)
+                        + prog_off)
+        hw_b = stack_configs(list(r.hw_configs))
+        hw_parts.append(jax.tree.map(
+            lambda x: jnp.tile(jnp.repeat(x, D, axis=0), G), hw_b))
+        n = G * H * D
+        members.append((r, lane_off, lane_off + n))
+        prog_off, img_off, lane_off = prog_off + G, img_off + D, \
+            lane_off + n
+    hw_grid = jax.tree.map(lambda *xs: jnp.concatenate(xs), *hw_parts)
+
+    from ..core.memory import DEFAULT_MAX_BANKS, scoreboard_bound
+    n_banks_req = max(int(np.asarray(c.n_banks))
+                      for r in requests for c in r.hw_configs)
+    max_banks = scoreboard_bound(max(n_banks_req, DEFAULT_MAX_BANKS))
+    plan = GridPlan(batch, jnp.asarray(images, jnp.int32),
+                    np.concatenate(img_idx), np.concatenate(prog_idx),
+                    hw_grid, max_banks)
+    return plan, members
+
+
+class SweepService:
+    """Bounded-queue sweep server: pack, execute in units, stream."""
+
+    def __init__(self, profile: Profile, *, slots: int = 2,
+                 queue_max: int = 16, pack_max_lanes: int = 256,
+                 unit_size: int = 8, max_steps: int = 2048,
+                 mem_size: int = 4096, backend: str = "xla",
+                 retry: Optional[RetryPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 runner_kw: Optional[dict] = None):
+        self.profile = profile
+        self.slots = slots
+        self.queue_max = queue_max
+        self.pack_max_lanes = pack_max_lanes
+        self.unit_size = unit_size
+        self.max_steps = max_steps
+        self.mem_size = mem_size
+        self.backend = backend
+        self.retry = retry
+        self.clock = clock
+        self.runner_kw = dict(runner_kw or {})
+        self.queue: deque = deque()
+        self._slots: List[Optional[_Slot]] = [None] * slots
+        self.completed: Dict[int, RequestResult] = {}
+        self._next_rid = 0
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, request: SweepRequest) -> int:
+        """Enqueue; raises ``ServiceOverloaded`` when the queue is full
+        (backpressure -- the caller retries, the service stays bounded)."""
+        if len(self.queue) >= self.queue_max:
+            raise ServiceOverloaded(
+                f"admission queue full ({self.queue_max} requests); "
+                f"retry after draining")
+        if int(request.mem_images.shape[1]) != self.mem_size:
+            raise ValueError(
+                f"request image width {request.mem_images.shape[1]} != "
+                f"service mem_size {self.mem_size}")
+        request.rid = self._next_rid
+        self._next_rid += 1
+        request.submitted_at = self.clock()
+        self.queue.append(request)
+        return request.rid
+
+    def _admit(self):
+        """Fill free slots: greedily pack queued requests (FIFO) into a
+        merged grid up to ``pack_max_lanes`` lanes per slot."""
+        for si in range(self.slots):
+            if self._slots[si] is not None or not self.queue:
+                continue
+            pack, lanes = [], 0
+            while self.queue:
+                n = self.queue[0].n_lanes
+                if pack and lanes + n > self.pack_max_lanes:
+                    break
+                pack.append(self.queue.popleft())
+                lanes += n
+            plan, members = _merge_plans(pack)
+            runner = ResumableSweepRunner(
+                plan=plan, profile=self.profile, unit_size=self.unit_size,
+                max_steps=self.max_steps, mem_size=self.mem_size,
+                backend=self.backend, retry=self.retry,
+                **self.runner_kw)
+            self._slots[si] = _Slot(runner, members)
+
+    # -- execution ----------------------------------------------------------
+    def _expire(self, slot: _Slot):
+        """Skip the remaining units of requests past their deadline --
+        only units *wholly owned* by expired requests are skipped, so a
+        shared boundary unit still serves its live co-tenants."""
+        now = self.clock()
+        for r, lo, hi in slot.members:
+            if (r.deadline_s is not None and r.rid not in slot.expired
+                    and now - r.submitted_at > r.deadline_s):
+                slot.expired.add(r.rid)
+        if not slot.expired:
+            return
+        spans = [(lo, hi) for r, lo, hi in slot.members
+                 if r.rid in slot.expired]
+        for k in slot.runner.pending_units():
+            ulo, uhi = slot.runner._unit_range(k)
+            if any(lo <= ulo and uhi <= hi for lo, hi in spans):
+                slot.runner.mark_skipped(k)
+
+    def _deliver_partial(self, slot: _Slot, ulo: int, uhi: int,
+                         res_np: Dict[str, np.ndarray]):
+        for r, lo, hi in slot.members:
+            if r.on_partial is None:
+                continue
+            a, b = max(lo, ulo), min(hi, uhi)
+            if a < b:
+                part = {f: res_np[f][a - ulo:b - ulo]
+                        for f in RESULT_FIELDS}
+                r.on_partial(r.rid, a - lo, b - lo, part)
+
+    def _finish(self, si: int):
+        slot = self._slots[si]
+        full = slot.runner.stitch(require_complete=False)
+        arrays = {f: np.asarray(getattr(full, f)) for f in RESULT_FIELDS}
+        skipped = set(slot.runner._skipped)
+        for r, lo, hi in slot.members:
+            sk = sum(max(0, min(hi, uhi) - max(lo, ulo))
+                     for k in skipped
+                     for ulo, uhi in [slot.runner._unit_range(k)])
+            degr = {k: v for k, v in slot.runner.report.degraded.items()
+                    if max(lo, slot.runner._unit_range(k)[0])
+                    < min(hi, slot.runner._unit_range(k)[1])}
+            self.completed[r.rid] = RequestResult(
+                rid=r.rid,
+                arrays={f: arrays[f][lo:hi] for f in RESULT_FIELDS},
+                expired=r.rid in slot.expired,
+                degraded_units=degr, skipped_lanes=sk)
+        self._slots[si] = None
+
+    def step(self) -> bool:
+        """Admit + advance every active slot by one work unit; returns
+        True while anything is queued or in flight."""
+        self._admit()
+        busy = False
+        for si in range(self.slots):
+            slot = self._slots[si]
+            if slot is None:
+                continue
+            self._expire(slot)
+            pending = slot.runner.pending_units()
+            if not pending:
+                self._finish(si)
+                continue
+            busy = True
+            k = pending[0]
+            _, res_np = slot.runner.run_unit(k)
+            self._deliver_partial(slot, *slot.runner._unit_range(k),
+                                  res_np)
+            if not slot.runner.pending_units():
+                self._finish(si)
+        return busy or bool(self.queue) \
+            or any(s is not None for s in self._slots)
+
+    def drain(self) -> Dict[int, RequestResult]:
+        """Run to completion and return every request's result."""
+        while self.step():
+            pass
+        return dict(self.completed)

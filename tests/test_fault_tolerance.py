@@ -156,6 +156,52 @@ def test_elastic_plan_preserves_model_axis():
     assert plan_downscale(7) is None
 
 
+def test_failure_detector_startup_grace():
+    """Regression: a node that never beat had age == inf and was declared
+    failed instantly.  Registration at construction gives a fresh fleet
+    the full timeout as startup grace -- but a node that never comes up
+    must still fail after the timeout."""
+    t = {"now": 100.0}
+    bus = HeartbeatBus(clock=lambda: t["now"])
+    det = FailureDetector(bus, ["n0", "n1"], timeout=10.0)
+    assert det.failed() == set()                 # fresh fleet: grace
+    assert det.status("n1") == "healthy"
+    t["now"] = 106.0
+    bus.beat("n0")
+    assert det.status("n1") == "suspect"         # aging from registration
+    t["now"] = 110.0
+    assert det.failed() == {"n1"}                # never came up -> failed
+    assert det.status("n0") == "healthy"
+
+
+def test_failure_detector_remove_stops_tracking():
+    t = {"now": 0.0}
+    bus = HeartbeatBus(clock=lambda: t["now"])
+    det = FailureDetector(bus, ["n0", "n1"], timeout=5.0)
+    t["now"] = 10.0
+    assert det.failed() == {"n0", "n1"}
+    det.remove("n1")
+    assert det.failed() == {"n0"} and det.nodes == ["n0"]
+
+
+def test_straggler_policy_not_shared_between_detectors():
+    """Regression: the policy default used to be one shared mutable
+    object -- tuning one detector silently retuned every other."""
+    a = StragglerDetector(["n0"])
+    b = StragglerDetector(["n0"])
+    a.policy.z_threshold = 99.0
+    assert b.policy.z_threshold != 99.0
+
+
+def test_straggler_remove_then_late_report_is_ignored():
+    det = StragglerDetector([f"n{i}" for i in range(4)])
+    det.step({f"n{i}": 1.0 for i in range(4)})
+    det.remove("n3")
+    # an evicted node's straggling late report must not resurrect it
+    actions = det.step({f"n{i}": 1.0 for i in range(3)} | {"n3": 50.0})
+    assert "n3" not in actions and "n3" not in det.nodes
+
+
 def test_straggler_detection_and_escalation():
     det = StragglerDetector([f"n{i}" for i in range(8)])
     normal = {f"n{i}": 1.0 + 0.01 * i for i in range(8)}

@@ -59,3 +59,47 @@ def test_slot_splice_isolates_requests():
     b.step()
     shared = b.outputs[0]
     assert solo[:5] == shared[:5], (solo, shared)
+
+
+def test_retired_slot_does_not_advance_or_poison_index():
+    """Regression: step() advanced `lengths` for every slot, active or
+    not.  A retired slot's stale length then (a) crept forward forever
+    and (b) dragged the shared decode index past every live request's
+    true position, corrupting their cache writes."""
+    cfg = get_smoke_config("llama3.2-1b")
+    model = make_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    rng = np.random.default_rng(2)
+    long_p = rng.integers(0, cfg.vocab, 12)
+    short_p = rng.integers(0, cfg.vocab, 4)
+
+    # reference: the short request decoded alone
+    a = Server(model, params, slots=1, context=32)
+    a.admit(0, short_p)
+    for _ in range(4):
+        a.step()
+    solo = a.outputs[0]
+
+    # long request decodes, retires; short request admitted afterwards --
+    # the retired slot's (larger) length must not move or leak into the
+    # decode index
+    b = Server(model, params, slots=2, context=32)
+    b.admit(0, long_p)
+    b.step()
+    b.step()
+    b.active[0] = False                    # retire mid-decode
+    frozen = int(b.lengths[0])
+    b.admit(1, short_p)
+    for _ in range(4):
+        b.step()
+    assert int(b.lengths[0]) == frozen     # retired slot froze
+    assert b.outputs[1] == solo, (b.outputs[1], solo)
+
+
+def test_step_noop_when_all_slots_idle():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = make_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    srv = Server(model, params, slots=2, context=32)
+    srv.step()                             # no active slots: no-op
+    assert (srv.lengths == 0).all()
