@@ -1,0 +1,168 @@
+"""Benchmark-regression gate: compare a fresh bench JSON to a baseline.
+
+  PYTHONPATH=src python -m benchmarks.compare_bench \
+      benchmarks/baseline_smoke.json BENCH_sim_throughput.smoke.json
+
+Exits non-zero when any gated metric regresses past its tolerance, so the
+CI bench-smoke lane fails on real performance regressions while staying
+quiet under normal CI-runner noise.  All gated metrics are *ratios* of two
+timings taken back-to-back on the same machine (packed vs loop, vectorized
+vs loop, checkpointed vs plain), which cancels most host-speed variance;
+absolute seconds are never compared across runs.
+
+Gated metrics and tolerances (rel = allowed fractional drop vs baseline):
+
+  multi_kernel[G].steady_ratio      rel 0.15   higher is better; the
+                                               tentpole metric -- packed
+                                               steady-state vs per-program
+                                               loop at each grid scale
+  multi_kernel[G].compile_speedup   rel 0.25   higher is better
+  mem_completion.speedup            rel 0.50   higher is better (tiny
+                                               timings, noisiest ratio)
+  recovery.checkpoint_overhead_pct  abs +8.0   lower is better (percentage
+                                               points over plain runner)
+
+Hard invariants checked on the *current* run alone (no baseline needed):
+
+  multi_kernel[G].trace_counts_packed <= n_buckets   zero-retrace property
+                                                     of the bucketed path
+
+Refresh the baseline after an intentional perf change with:
+
+  PYTHONPATH=src python -m benchmarks.compare_bench \
+      --update-baseline benchmarks/baseline_smoke.json \
+      BENCH_sim_throughput.smoke.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# (label, relative drop tolerance) for higher-is-better per-G metrics.
+MK_REL_TOL = {"steady_ratio": 0.15, "compile_speedup": 0.25}
+MEM_SPEEDUP_REL_TOL = 0.50
+CKPT_OVERHEAD_ABS_TOL = 8.0  # percentage points
+
+
+def _mk_rows(payload: dict) -> dict:
+    """Index multi_kernel rows by G (payload is schema-validated upstream)."""
+    rows = payload.get("multi_kernel", [])
+    if isinstance(rows, dict):  # pre-bucketing single-row payloads
+        rows = [rows]
+    return {int(r["G"]): r for r in rows}
+
+
+def check_invariants(current: dict) -> List[str]:
+    """Baseline-free hard checks on the current run."""
+    errors = []
+    for g, row in sorted(_mk_rows(current).items()):
+        traces = row.get("trace_counts_packed")
+        n_buckets = row.get("n_buckets")
+        if traces is None or n_buckets is None:
+            continue
+        if traces > n_buckets:
+            errors.append(
+                f"multi_kernel[G={g}]: trace_counts_packed={traces} > "
+                f"n_buckets={n_buckets} (retrace regression: the packed "
+                "path must reuse one cached executable per bucket)")
+    return errors
+
+
+def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
+    """Return (failures, report_lines) for current vs baseline."""
+    failures: List[str] = []
+    report: List[str] = []
+
+    def gate_higher(label: str, base: float, cur: float, rel_tol: float):
+        floor = base * (1.0 - rel_tol)
+        verdict = "OK" if cur >= floor else "FAIL"
+        report.append(f"  {verdict:4s} {label}: {cur:.3f} vs baseline "
+                      f"{base:.3f} (floor {floor:.3f}, tol -{rel_tol:.0%})")
+        if cur < floor:
+            failures.append(f"{label}: {cur:.3f} < {floor:.3f} "
+                            f"(baseline {base:.3f} - {rel_tol:.0%})")
+
+    base_mk, cur_mk = _mk_rows(baseline), _mk_rows(current)
+    for g in sorted(base_mk):
+        if g not in cur_mk:
+            failures.append(f"multi_kernel[G={g}]: row present in baseline "
+                            "but missing from current run")
+            continue
+        for metric, tol in MK_REL_TOL.items():
+            if metric in base_mk[g] and metric in cur_mk[g]:
+                gate_higher(f"multi_kernel[G={g}].{metric}",
+                            float(base_mk[g][metric]),
+                            float(cur_mk[g][metric]), tol)
+
+    b_mem = baseline.get("mem_completion", {}).get("speedup")
+    c_mem = current.get("mem_completion", {}).get("speedup")
+    if b_mem is not None and c_mem is not None:
+        gate_higher("mem_completion.speedup", float(b_mem), float(c_mem),
+                    MEM_SPEEDUP_REL_TOL)
+
+    b_ck = baseline.get("recovery", {}).get("checkpoint_overhead_pct")
+    c_ck = current.get("recovery", {}).get("checkpoint_overhead_pct")
+    if b_ck is not None and c_ck is not None:
+        ceiling = float(b_ck) + CKPT_OVERHEAD_ABS_TOL
+        verdict = "OK" if float(c_ck) <= ceiling else "FAIL"
+        report.append(f"  {verdict:4s} recovery.checkpoint_overhead_pct: "
+                      f"{float(c_ck):.2f} vs baseline {float(b_ck):.2f} "
+                      f"(ceiling {ceiling:.2f}, tol +{CKPT_OVERHEAD_ABS_TOL}pt)")
+        if float(c_ck) > ceiling:
+            failures.append(f"recovery.checkpoint_overhead_pct: "
+                            f"{float(c_ck):.2f} > {ceiling:.2f} "
+                            f"(baseline {float(b_ck):.2f} + "
+                            f"{CKPT_OVERHEAD_ABS_TOL}pt)")
+
+    return failures, report
+
+
+def main(argv) -> int:
+    update = "--update-baseline" in argv
+    argv = [a for a in argv if a != "--update-baseline"]
+    if len(argv) != 2:
+        print("usage: python -m benchmarks.compare_bench "
+              "[--update-baseline] <baseline.json> <current.json>")
+        return 2
+    baseline_path, current_path = Path(argv[0]), Path(argv[1])
+    current = json.loads(current_path.read_text())
+
+    inv = check_invariants(current)
+    for e in inv:
+        print(f"[compare_bench] INVARIANT {e}")
+
+    if update:
+        baseline_path.write_text(json.dumps(current, indent=2) + "\n")
+        print(f"[compare_bench] baseline updated: {baseline_path}")
+        return 1 if inv else 0
+
+    if not baseline_path.exists():
+        print(f"[compare_bench] no baseline at {baseline_path}; "
+              "run with --update-baseline to create one")
+        return 1
+    baseline = json.loads(baseline_path.read_text())
+
+    if bool(baseline.get("smoke")) != bool(current.get("smoke")):
+        print("[compare_bench] smoke-mode mismatch between baseline "
+              f"({baseline.get('smoke')}) and current "
+              f"({current.get('smoke')}); ratios are not comparable")
+        return 1
+
+    failures, report = compare(baseline, current)
+    print(f"[compare_bench] {current_path} vs {baseline_path}")
+    for line in report:
+        print(line)
+    failures = inv + failures
+    if failures:
+        print(f"[compare_bench] {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("[compare_bench] all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -7,7 +7,7 @@ benchmark-smoke lane fails when a code change silently drops or retypes a
 field other tooling depends on.  Uses ``jsonschema`` when installed;
 otherwise a built-in validator covering exactly the subset of JSON Schema
 the checked-in schema uses (type / required / properties / items /
-minItems / enum / minimum / exclusiveMinimum).
+minItems / enum / minimum / exclusiveMinimum / additionalProperties).
 """
 from __future__ import annotations
 
@@ -32,14 +32,22 @@ def _check(instance, schema: dict, path: str, errors: List[str]) -> None:
     """Minimal JSON-Schema subset validator (see module docstring)."""
     t = schema.get("type")
     if t is not None:
-        py = _TYPES[t]
-        ok = isinstance(instance, py)
-        # bool is an int subclass in Python; JSON draws the line
-        if ok and t in ("integer", "number") and isinstance(instance, bool):
-            ok = False
-        if not ok:
+        ts = t if isinstance(t, list) else [t]
+
+        def match(tt):
+            if tt == "null":
+                return instance is None
+            ok = isinstance(instance, _TYPES[tt])
+            # bool is an int subclass in Python; JSON draws the line
+            if ok and tt in ("integer", "number") \
+                    and isinstance(instance, bool):
+                ok = False
+            return ok
+        if not any(match(tt) for tt in ts):
             errors.append(f"{path}: expected {t}, got "
                           f"{type(instance).__name__}")
+            return
+        if instance is None:
             return
     if "enum" in schema and instance not in schema["enum"]:
         errors.append(f"{path}: {instance!r} not in {schema['enum']}")
@@ -58,6 +66,12 @@ def _check(instance, schema: dict, path: str, errors: List[str]) -> None:
         for key, sub in schema.get("properties", {}).items():
             if key in instance:
                 _check(instance[key], sub, f"{path}.{key}", errors)
+        if schema.get("additionalProperties") is False:
+            known = set(schema.get("properties", ()))
+            for key in instance:
+                if key not in known:
+                    errors.append(f"{path}: unknown key {key!r} "
+                                  "(additionalProperties: false)")
     if isinstance(instance, list):
         if "minItems" in schema and len(instance) < schema["minItems"]:
             errors.append(f"{path}: {len(instance)} items < minItems "

@@ -1,0 +1,293 @@
+"""Per-shape autotune cache for the sweep engine.
+
+``blk_b`` (Pallas batch tile), ``chunk_steps`` (early-exit chunk) and
+``max_buckets`` (length-bucket count of a packed multi-kernel sweep) all
+depend on the *shape class* of a sweep -- ``(G, t_max, H, D, backend,
+n_devices)`` -- not on the kernel contents.  This module gives the DSE
+stack one answer to "what config should this shape run with":
+
+  * ``AutotuneCache.resolve`` fills any ``AUTO`` knob from a persisted
+    JSON cache of previously timed winners, falling back to the static
+    defaults (32 / 64 / 4) on a miss -- so an untuned system behaves
+    exactly as before;
+  * ``tune_sweep`` times a small candidate grid on the *actual* sweep
+    (first encounter of a shape class, or an explicit pre-warm pass) and
+    persists the winner, so the heterogeneous request mix a real service
+    sees is tuned automatically;
+  * the cache file is schema-validated (``autotune_schema.json``, the
+    same discipline as ``benchmarks/bench_schema.json``): a corrupt file,
+    a stale version, or a malformed entry is *dropped*, never fatal --
+    the cache is an accelerator, not a dependency.
+
+Consulted by ``dse.sweep`` (every knob defaults to ``AUTO``), by
+``service.runner.ResumableSweepRunner`` (blk_b / chunk_steps) and by
+``service.server.SweepService`` (bucket count of request packing).
+Opt into *automatic* first-encounter tuning with ``REPRO_AUTOTUNE=1``
+(or ``dse.sweep(..., autotune=True)``); cache location override:
+``REPRO_AUTOTUNE_CACHE=/path/to/cache.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Union
+
+# The sentinel for "let the autotuner decide".  A distinct object (not
+# None): ``chunk_steps=None`` already means "disable chunking" in the
+# sweep API, so AUTO must be distinguishable from an explicit None.
+AUTO = "auto"
+
+DEFAULT_BLK_B = 32
+DEFAULT_CHUNK_STEPS = 64
+DEFAULT_MAX_BUCKETS = 4
+CACHE_VERSION = 1
+_ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+_ENV_ENABLE = "REPRO_AUTOTUNE"
+
+
+def is_auto(*values) -> bool:
+    """True if ANY of the values is the AUTO sentinel."""
+    return any(isinstance(v, str) and v == AUTO for v in values)
+
+
+def autotune_enabled(flag: Optional[bool] = None) -> bool:
+    """Explicit flag wins; otherwise the REPRO_AUTOTUNE env opt-in."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get(_ENV_ENABLE, "") not in ("", "0", "false", "no")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """The tuning key: what a sweep *looks like* to the engine.  H and D
+    are the hardware/data grid extents for ``dse.sweep``; the service's
+    merged plans use ``H = lanes per program, D = 1`` as the lane-shape
+    proxy (same key space, same recurrence behavior)."""
+    G: int
+    t_max: int
+    H: int
+    D: int
+    backend: str
+    n_devices: int = 1
+
+    @property
+    def key(self) -> str:
+        return (f"g{self.G}-t{self.t_max}-h{self.H}-d{self.D}-"
+                f"{self.backend}-dev{self.n_devices}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """A resolved knob set.  ``source`` records where it came from:
+    ``"default"`` (static fallbacks), ``"cache"`` (persisted winner),
+    ``"tuned"`` (just timed), ``"explicit"`` (caller pinned every
+    knob)."""
+    blk_b: int
+    chunk_steps: Optional[int]
+    max_buckets: int
+    source: str = "default"
+    points_per_s: Optional[float] = None
+
+
+def _valid_entry(e) -> bool:
+    """One cache entry against autotune_schema.json's constraints (the
+    subset that matters for safety); invalid entries are skipped."""
+    if not isinstance(e, dict) or "chunk_steps" not in e:
+        return False
+    bb = e.get("blk_b")
+    if not (isinstance(bb, int) and not isinstance(bb, bool) and bb >= 1):
+        return False
+    cs = e["chunk_steps"]
+    if cs is not None and not (isinstance(cs, int)
+                               and not isinstance(cs, bool) and cs >= 1):
+        return False
+    mb = e.get("max_buckets")
+    if not (isinstance(mb, int) and not isinstance(mb, bool) and mb >= 1):
+        return False
+    pps = e.get("points_per_s")
+    if pps is not None and not isinstance(pps, (int, float)):
+        return False
+    return True
+
+
+def _default_path() -> Path:
+    env = os.environ.get(_ENV_CACHE, "")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+class AutotuneCache:
+    """Schema-validated JSON store of per-shape winners.
+
+    Load is maximally tolerant: unreadable file / invalid JSON / wrong
+    version / malformed entries all degrade to "no cached winner" --
+    ``resolve`` then falls back to the static defaults.  Saves are
+    atomic (tmp + rename), so a crash mid-save never corrupts winners
+    already persisted."""
+
+    def __init__(self, path: Optional[Union[str, Path]] = None):
+        self.path = Path(path) if path is not None else _default_path()
+        self.entries: Dict[str, dict] = {}
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            raw = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return
+        if not isinstance(raw, dict) \
+                or raw.get("version") != CACHE_VERSION \
+                or not isinstance(raw.get("entries"), dict):
+            return                           # stale/foreign cache: ignore
+        self.entries = {k: v for k, v in raw["entries"].items()
+                        if isinstance(k, str) and _valid_entry(v)}
+
+    def save(self) -> None:
+        payload = {"version": CACHE_VERSION, "entries": self.entries}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def lookup(self, shape: ShapeClass) -> Optional[TunedConfig]:
+        e = self.entries.get(shape.key)
+        if e is None:
+            return None
+        return TunedConfig(blk_b=e["blk_b"], chunk_steps=e["chunk_steps"],
+                           max_buckets=e["max_buckets"], source="cache",
+                           points_per_s=e.get("points_per_s"))
+
+    def store(self, shape: ShapeClass, cfg: TunedConfig) -> None:
+        self.entries[shape.key] = {
+            "blk_b": int(cfg.blk_b),
+            "chunk_steps": (None if cfg.chunk_steps is None
+                            else int(cfg.chunk_steps)),
+            "max_buckets": int(cfg.max_buckets),
+            "points_per_s": cfg.points_per_s,
+            "shape": dataclasses.asdict(shape),
+        }
+        self.save()
+
+    def resolve(self, shape: ShapeClass, *,
+                blk_b: Union[int, str] = AUTO,
+                chunk_steps: Union[int, None, str] = AUTO,
+                max_buckets: Union[int, str] = AUTO) -> TunedConfig:
+        """Fill AUTO knobs from the cache, else the static defaults;
+        explicit (non-AUTO) knobs always win."""
+        cached = self.lookup(shape) if is_auto(blk_b, chunk_steps,
+                                               max_buckets) else None
+        if not is_auto(blk_b, chunk_steps, max_buckets):
+            source = "explicit"
+        elif cached is not None:
+            source = "cache"
+        else:
+            source = "default"
+
+        def pick(explicit, cached_v, default):
+            if not is_auto(explicit):
+                return explicit
+            return cached_v if cached is not None else default
+
+        return TunedConfig(
+            blk_b=int(pick(blk_b, cached.blk_b if cached else None,
+                           DEFAULT_BLK_B)),
+            chunk_steps=pick(chunk_steps,
+                             cached.chunk_steps if cached else None,
+                             DEFAULT_CHUNK_STEPS),
+            max_buckets=int(pick(max_buckets,
+                                 cached.max_buckets if cached else None,
+                                 DEFAULT_MAX_BUCKETS)),
+            source=source,
+            points_per_s=cached.points_per_s if cached else None)
+
+
+_caches: Dict[str, AutotuneCache] = {}
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache for the current REPRO_AUTOTUNE_CACHE target
+    (re-resolved per call so tests can repoint the env)."""
+    key = str(_default_path())
+    c = _caches.get(key)
+    if c is None:
+        c = _caches[key] = AutotuneCache()
+    return c
+
+
+def default_candidates(shape: ShapeClass, max_steps: int) -> List[dict]:
+    """The small first-encounter candidate grid: bucket counts that make
+    sense for G, early-exit chunk sizes around the default, and (Pallas
+    only) two batch tiles."""
+    buckets = sorted({b for b in (1, 2, 4, min(shape.G, 8))
+                      if 1 <= b <= shape.G})
+    chunks = sorted({c for c in (32, 64, 128) if c <= max(max_steps, 32)})
+    blks = (16, 32) if shape.backend == "pallas" else (32,)
+    return [dict(max_buckets=b, chunk_steps=c, blk_b=k)
+            for b in buckets for c in chunks for k in blks]
+
+
+def tune_sweep(programs, profile, hw_configs, mem_images, *,
+               backend: str = "xla", max_steps: int = 2048,
+               mem_size: int = 4096, mesh=None, interpret=None,
+               cache: Optional[AutotuneCache] = None,
+               candidates: Optional[Sequence[dict]] = None,
+               repeats: int = 2) -> TunedConfig:
+    """Time the candidate grid on the actual sweep and persist the winner.
+
+    Each candidate is compiled+warmed once, then timed ``repeats`` times
+    (min taken -- noise-robust for short sweeps).  The winner lands in
+    the cache keyed by the sweep's shape class, so every later
+    ``dse.sweep``/service call of that shape picks it up for free.
+    Import of dse is deferred (dse imports this module)."""
+    import jax
+
+    from . import dse
+    from .program import as_program_batch
+
+    batch = as_program_batch(programs)
+    G = batch.n_programs
+    H, D = len(hw_configs), int(mem_images.shape[0])
+    n_devices = int(mesh.devices.size) if mesh is not None else 1
+    shape = ShapeClass(G=G, t_max=batch.t_max, H=H, D=D, backend=backend,
+                       n_devices=n_devices)
+    cands = list(candidates) if candidates is not None \
+        else default_candidates(shape, max_steps)
+    B = G * H * D
+    best = None
+    for cand in cands:
+        def run():
+            jax.block_until_ready(dse.sweep(
+                program=batch, profile=profile, hw_configs=hw_configs,
+                mem_images=mem_images, mesh=mesh, max_steps=max_steps,
+                mem_size=mem_size, backend=backend, interpret=interpret,
+                chunk_steps=cand["chunk_steps"], blk_b=cand["blk_b"],
+                max_buckets=cand["max_buckets"], autotune=False))
+        run()                                 # compile + warm
+        ts = []
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        pps = B / max(min(ts), 1e-9)
+        if best is None or pps > best[0]:
+            best = (pps, cand)
+    pps, cand = best
+    cfg = TunedConfig(blk_b=cand["blk_b"], chunk_steps=cand["chunk_steps"],
+                      max_buckets=cand["max_buckets"], source="tuned",
+                      points_per_s=pps)
+    (cache or default_cache()).store(shape, cfg)
+    return cfg

@@ -149,44 +149,74 @@ def _dedup_stores(is_store, addr):
     return jnp.zeros_like(is_store).at[order].set(landed_s)
 
 
-def make_step_fn(rows: int, cols: int, mem_size: int,
+class InstrRows(NamedTuple):
+    """One decoded instruction: the ``(P,)`` per-PE rows of every program
+    table at a single PC.  ``exec_step`` (``make_exec_fn``) consumes this
+    directly, so a caller that already fetched the row -- e.g. the sweep
+    body's single fused-table gather (``program.fused_rows``) -- never
+    re-gathers.  Mask fields may be bool or int32 0/1 (both compare
+    ``!= 0`` identically)."""
+    ops: jnp.ndarray
+    dest: jnp.ndarray
+    srcA: jnp.ndarray
+    srcB: jnp.ndarray
+    imm: jnp.ndarray
+    is_load: jnp.ndarray
+    is_store: jnp.ndarray
+    writes_rout: jnp.ndarray
+    kindA: jnp.ndarray
+    kindB: jnp.ndarray
+
+
+def fetch_rows(tables: ProgramTables, pc) -> InstrRows:
+    """Index every per-instruction table at ``pc`` -> ``InstrRows``."""
+    return InstrRows(tables.ops[pc], tables.dest[pc], tables.srcA[pc],
+                     tables.srcB[pc], tables.imm[pc], tables.is_load[pc],
+                     tables.is_store[pc], tables.writes_rout[pc],
+                     tables.kindA[pc], tables.kindB[pc])
+
+
+def rows_from_fused(fused_row: jnp.ndarray) -> InstrRows:
+    """``(N_ROW_FIELDS, P)`` fused row (``program.fused_rows`` layout) ->
+    ``InstrRows``."""
+    return InstrRows(*(fused_row[i] for i in range(len(InstrRows._fields))))
+
+
+def make_exec_fn(rows: int, cols: int, mem_size: int,
                  max_banks: int = DEFAULT_MAX_BANKS):
-    """Build the single-instruction transition function with the program
-    as a *runtime operand*: ``step(tables, state, hw, live=None)``.
+    """Build the execute half of the transition function:
+    ``exec_step(instr: InstrRows, n_instrs, state, hw, live) ->
+    (SimState, StepRecord)``.
 
-    ``tables`` is a ``program.ProgramTables`` pytree -- a traced argument,
-    not a closure constant -- so the same compiled step (and everything
-    scanned over it) serves every program of the same padded shape; the
-    PC is clipped to ``tables.n_instrs - 1``, preserving each program's
-    own EXIT/clamp semantics under NOP padding.
-
-    max_banks: static bank-scoreboard bound for the contention model; must
-    cover every n_banks the step will be run with (config-derived by the
-    sweep drivers, see memory.scoreboard_bound)."""
+    The instruction row is an argument, not fetched here -- the fetch/
+    execute split lets the DSE sweep body gather the fused instruction
+    row ONCE per step (a single ``prog_idx * T_max + pc`` row of the
+    fused table) and reuse it for both the simulator and the fused
+    case-(vi) energy estimate.  ``make_step_fn`` composes this with
+    ``fetch_rows`` to keep the original tables-in API."""
     nbr = {k: jnp.asarray(v) for k, v in
            isa.neighbour_index_maps(rows, cols).items()}
 
-    def step(tables: ProgramTables, state: SimState, hw: HwConfig,
-             live: Optional[jnp.ndarray] = None
-             ) -> Tuple[SimState, StepRecord]:
+    def exec_step(instr: InstrRows, n_instrs, state: SimState, hw: HwConfig,
+                  live: Optional[jnp.ndarray] = None
+                  ) -> Tuple[SimState, StepRecord]:
         # `live` lets a caller mask execution beyond ~state.done (e.g. the
         # chunked DSE sweep freezing lanes past their step budget); the
         # default reproduces the original done-only masking bit-for-bit.
         if live is None:
             live = ~state.done
-        tables = jax.tree.map(jnp.asarray, tables)
-        P = tables.ops.shape[-1]
+        P = instr.ops.shape[-1]
         pc = state.pc
-        op_row = tables.ops[pc]
-        imm_row = tables.imm[pc]
-        a = _gather_operands(tables.srcA[pc], imm_row, state.regs,
+        op_row = jnp.asarray(instr.ops)
+        imm_row = jnp.asarray(instr.imm)
+        a = _gather_operands(jnp.asarray(instr.srcA), imm_row, state.regs,
                              state.rout, nbr)
-        b = _gather_operands(tables.srcB[pc], imm_row, state.regs,
+        b = _gather_operands(jnp.asarray(instr.srcB), imm_row, state.regs,
                              state.rout, nbr)
 
         # ---- memory ------------------------------------------------------
-        is_load = tables.is_load[pc]
-        is_store = tables.is_store[pc]
+        is_load = jnp.asarray(instr.is_load) != 0
+        is_store = jnp.asarray(instr.is_store) != 0
         # LWD/SWD address = imm; LWI addr = a; SWI addr = a (value = b).
         direct = (op_row == isa.OP["LWD"]) | (op_row == isa.OP["SWD"])
         addr = jnp.where(direct, imm_row, a) % mem_size
@@ -199,9 +229,9 @@ def make_step_fn(rows: int, cols: int, mem_size: int,
         # ---- ALU + writeback ---------------------------------------------
         alu = _alu_results(op_row, a, b)
         result = jnp.where(is_load, load_val, alu)
-        writes = tables.writes_rout[pc]
+        writes = jnp.asarray(instr.writes_rout) != 0
         rout_new = jnp.where(writes, result, state.rout)
-        d = tables.dest[pc]
+        d = jnp.asarray(instr.dest)
         regs_new = state.regs
         for k in range(4):
             hit = writes & (d == k)
@@ -219,7 +249,7 @@ def make_step_fn(rows: int, cols: int, mem_size: int,
 
         # ---- control ------------------------------------------------------
         next_pc = _branch_target(op_row, a, b, imm_row, pc)
-        next_pc = jnp.clip(next_pc, 0, tables.n_instrs - 1)
+        next_pc = jnp.clip(next_pc, 0, n_instrs - 1)
         exited = (op_row == isa.OP["EXIT"]).any()
 
         new_state = SimState(
@@ -243,6 +273,35 @@ def make_step_fn(rows: int, cols: int, mem_size: int,
             rout=jnp.where(live, rout_new, state.rout),
         )
         return new_state, rec
+
+    return exec_step
+
+
+def make_step_fn(rows: int, cols: int, mem_size: int,
+                 max_banks: int = DEFAULT_MAX_BANKS):
+    """Build the single-instruction transition function with the program
+    as a *runtime operand*: ``step(tables, state, hw, live=None)``.
+
+    ``tables`` is a ``program.ProgramTables`` pytree -- a traced argument,
+    not a closure constant -- so the same compiled step (and everything
+    scanned over it) serves every program of the same padded shape; the
+    PC is clipped to ``tables.n_instrs - 1``, preserving each program's
+    own EXIT/clamp semantics under NOP padding.  Thin fetch+execute
+    composition over ``make_exec_fn`` (callers that already hold the
+    instruction row -- the fused-table sweep body -- call the exec fn
+    directly and skip the per-table gathers).
+
+    max_banks: static bank-scoreboard bound for the contention model; must
+    cover every n_banks the step will be run with (config-derived by the
+    sweep drivers, see memory.scoreboard_bound)."""
+    exec_step = make_exec_fn(rows, cols, mem_size, max_banks=max_banks)
+
+    def step(tables: ProgramTables, state: SimState, hw: HwConfig,
+             live: Optional[jnp.ndarray] = None
+             ) -> Tuple[SimState, StepRecord]:
+        tables = jax.tree.map(jnp.asarray, tables)
+        return exec_step(fetch_rows(tables, state.pc), tables.n_instrs,
+                         state, hw, live=live)
 
     return step
 

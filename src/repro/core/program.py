@@ -232,6 +232,127 @@ def as_program_batch(program) -> ProgramBatch:
     return pack_programs(program)
 
 
+# --------------------------------------------------------------------------
+# Fused instruction rows: one gather per executed step
+# --------------------------------------------------------------------------
+
+# Field order of the fused row table.  A row ``fused[g * T_max + pc]`` is
+# the complete decoded instruction -- raw fields plus the derived masks and
+# operand-source kinds -- so the hot loop fetches ONE (N_ROW_FIELDS, P)
+# block per step instead of ten separate (P,) gathers.
+ROW_FIELDS = ("ops", "dest", "srcA", "srcB", "imm", "is_load", "is_store",
+              "writes_rout", "kindA", "kindB")
+N_ROW_FIELDS = len(ROW_FIELDS)
+ROW_IDX = {f: i for i, f in enumerate(ROW_FIELDS)}
+
+
+def fused_rows(tables: ProgramTables) -> np.ndarray:
+    """Fuse the per-instruction tables into one int32 row-major array.
+
+    ``(T, P)`` leaves -> ``(T, N_ROW_FIELDS, P)``; stacked ``(G, T_max,
+    P)`` leaves -> ``(G * T_max, N_ROW_FIELDS, P)``, flattened on the
+    instruction axis so a single scalar-prefetch-style row index
+    ``prog_idx * T_max + pc`` addresses the entire instruction.  Bool
+    masks are stored as int32 0/1 (consumers compare ``> 0``)."""
+    parts = [np.asarray(getattr(tables, f)).astype(np.int32)
+             for f in ROW_FIELDS]
+    fused = np.stack(parts, axis=-2)
+    if fused.ndim == 4:                       # (G, T, NF, P) -> (G*T, NF, P)
+        fused = fused.reshape(-1, N_ROW_FIELDS, fused.shape[-1])
+    return np.ascontiguousarray(fused)
+
+
+# --------------------------------------------------------------------------
+# Length bucketing: stop short kernels paying the longest kernel's T_max
+# --------------------------------------------------------------------------
+
+
+class ProgramBuckets(NamedTuple):
+    """A length-bucketed partition of G programs (see ``bucket_programs``).
+
+    ``batches[b]`` packs the programs of bucket ``b`` to that bucket's own
+    ``t_max``; ``groups[b]`` holds their indices into the original
+    sequence (ascending), and ``assignment[g]`` is program g's bucket.
+    """
+    batches: Tuple[ProgramBatch, ...]
+    groups: Tuple[Tuple[int, ...], ...]
+    assignment: np.ndarray                     # (G,) int32
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.batches)
+
+    @property
+    def padded_slots(self) -> int:
+        """Total padded instruction slots, sum over buckets of
+        ``len(bucket) * bucket_t_max`` -- the cost bucketing minimizes."""
+        return sum(b.n_programs * b.t_max for b in self.batches)
+
+
+def bucket_boundaries(lengths: Sequence[int],
+                      max_buckets: int) -> List[List[int]]:
+    """Partition items into <= max_buckets groups minimizing total padding.
+
+    Items are grouped by ascending length; groups are contiguous runs of
+    the sorted order (optimal: the padded cost of a group is
+    ``len(group) * max(length)``, which only ever improves by splitting
+    at sorted boundaries).  Exact O(n^2 * K) interval DP -- n is a kernel
+    count, tiny.  Returns groups of *indices into the input sequence*,
+    each ascending, ordered by ascending length."""
+    n = len(lengths)
+    if n == 0:
+        return []
+    k_max = max(1, min(int(max_buckets), n))
+    order = sorted(range(n), key=lambda i: (lengths[i], i))
+    ls = [int(lengths[i]) for i in order]
+    # dp[k][j] = min padded cost of covering sorted items [0, j) with k
+    # groups; a group [i, j) costs (j - i) * ls[j - 1] (sorted: max=last).
+    inf = float("inf")
+    dp = [[inf] * (n + 1) for _ in range(k_max + 1)]
+    cut = [[0] * (n + 1) for _ in range(k_max + 1)]
+    dp[0][0] = 0
+    for k in range(1, k_max + 1):
+        for j in range(1, n + 1):
+            for i in range(k - 1, j):
+                if dp[k - 1][i] == inf:
+                    continue
+                c = dp[k - 1][i] + (j - i) * ls[j - 1]
+                if c < dp[k][j]:
+                    dp[k][j], cut[k][j] = c, i
+    best_k = min(range(1, k_max + 1), key=lambda k: dp[k][n])
+    bounds = []
+    j = n
+    for k in range(best_k, 0, -1):
+        i = cut[k][j]
+        bounds.append((i, j))
+        j = i
+    bounds.reverse()
+    return [sorted(order[i:j]) for i, j in bounds]
+
+
+def bucket_programs(programs: Sequence[Program],
+                    max_buckets: int) -> ProgramBuckets:
+    """Group kernels by padded length into at most ``max_buckets`` packed
+    batches, so short kernels stop paying the longest kernel's ``T_max``
+    (and its convoy: a packed sweep runs every lane until the slowest
+    kernel exits).  The partition minimizes total padded instruction
+    slots; equal-length programs always share a bucket.  Scheduling one
+    packed batch per bucket through the lru-cached sweep cores grows
+    ``dse.TRACE_COUNTS`` by at most ``n_buckets``, never G."""
+    progs = list(programs)
+    if not progs:
+        raise ValueError("bucket_programs: empty program sequence")
+    if max_buckets < 1:
+        raise ValueError(f"bucket_programs: max_buckets={max_buckets} < 1")
+    groups = bucket_boundaries([p.n_instrs for p in progs], max_buckets)
+    batches = tuple(pack_programs([progs[i] for i in g]) for g in groups)
+    assignment = np.empty(len(progs), np.int32)
+    for b, g in enumerate(groups):
+        assignment[list(g)] = b
+    return ProgramBuckets(batches, tuple(tuple(g) for g in groups),
+                          assignment)
+
+
 class ProgramBuilder:
     """Builds a Program one CGRA instruction at a time.
 

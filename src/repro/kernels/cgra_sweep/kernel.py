@@ -5,18 +5,25 @@ points by K CGRA instructions, with every piece of architectural state --
 registers (blk_b, 4, P), output registers (blk_b, P), per-lane PC / done /
 cycle counter / executed-step counter / case-(vi) energy accumulator, and
 the full (blk_b, M) scratchpad memory image -- resident in VMEM for the
-whole chunk.  The stacked program tables (G*T_max, P) -- all G kernels of
-the sweep, flattened on the instruction axis -- are read from HBM once
-per tile instead of once per instruction, which is the entire point: the
-XLA scan path re-reads state every step, while here HBM traffic is
-amortized K-fold.
+whole chunk.  The fused program row table (G*T_max, N_ROW_FIELDS, P) --
+all G kernels of the sweep, every per-instruction field stacked into one
+array -- is read from HBM once per tile instead of once per instruction,
+which is the entire point: the XLA scan path re-reads state every step,
+while here HBM traffic is amortized K-fold.
 
-The *program axis is data*: each lane carries a program index, and every
-instruction-row gather is based at ``prog_idx * T_max``, so one compiled
-kernel sweeps heterogeneous kernels exactly as it sweeps heterogeneous
-hardware descriptors.  Per-lane true program lengths clip the PC, so NOP
-padding beyond a short kernel's end is never executed (bit-identical to
-sweeping that kernel alone).
+The *program axis is data*: each lane carries a program index, and the
+whole instruction is fetched with ONE scalar-prefetch-style gather of the
+fused row table (``program.fused_rows``, ``(G*T_max, N_ROW_FIELDS, P)``)
+at row ``prog_idx * T_max + pc`` -- the ten per-field gathers of the
+original engine collapsed into a single row fetch.  The row for the NEXT
+instruction is double-buffered: each step ends by prefetching the row at
+the just-resolved PC, so the fetch of step k+1 overlaps the (much wider)
+execute data flow of step k instead of serializing in front of it.  The
+previous instruction's switch-energy reference rows ride in the loop
+carry (refreshed from the persisted ``prev_pc`` once per chunk), so no
+step ever re-gathers them.  Per-lane true program lengths clip the PC,
+so NOP padding beyond a short kernel's end is never executed
+(bit-identical to sweeping that kernel alone).
 
 Fused per step, entirely on the VPU (no MXU use -- int32 lane math):
   * per-lane (program, PC) gather of the instruction row
@@ -47,17 +54,12 @@ import jax.numpy as jnp
 from ...core import isa
 from ...core.hwconfig import BUS_N_TO_M
 from ...core.memory import DEFAULT_MAX_BANKS
+from ...core.program import ROW_IDX
 from ..cgra_step.kernel import alu_select
 
 # Column layout of the packed per-lane integer hardware descriptor.
 HW_INT_FIELDS = ("smul_lat", "bus", "interleaved", "n_banks",
                  "dma_per_pe", "t_mem")
-
-
-def _gather_rows(table, row):
-    """(G*T, P) stacked table, (blk,) per-lane row index (prog_idx * T +
-    pc) -> (blk, P) rows."""
-    return jnp.take(table, row, axis=0, mode="clip")
 
 
 def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
@@ -67,9 +69,10 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
                        max_banks: int = DEFAULT_MAX_BANKS) -> Callable:
     """Build the fused K-step kernel body (closed over all static config).
 
-    n_instrs is the padded per-program length T_max; the program tables
-    arrive flattened (n_progs * T_max, P) and each lane's gathers are
-    based at its program index (see module docstring).
+    n_instrs is the padded per-program length T_max; the program arrives
+    as ONE fused row table (n_progs * T_max, N_ROW_FIELDS, P) and each
+    lane's single per-step row fetch is based at its program index (see
+    module docstring).
 
     max_banks: static bank-scoreboard width, config-derived by the driver
     (memory.scoreboard_bound); a power of two so the VMEM tile stays
@@ -147,24 +150,21 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             done_cols.append(jnp.where(req, slot + t_mem, 0))
         return jnp.stack(done_cols, axis=1).astype(jnp.int32)
 
-    def kernel(start_ref, plen_ref, ops_ref, dest_ref, srcA_ref, srcB_ref,
-               imm_ref, isld_ref, isst_ref, wr_ref, kA_ref, kB_ref,
+    # fused-row field indices (program.ROW_FIELDS layout)
+    F_OPS, F_DEST = ROW_IDX["ops"], ROW_IDX["dest"]
+    F_SRCA, F_SRCB = ROW_IDX["srcA"], ROW_IDX["srcB"]
+    F_IMM, F_ISLD = ROW_IDX["imm"], ROW_IDX["is_load"]
+    F_ISST, F_WR = ROW_IDX["is_store"], ROW_IDX["writes_rout"]
+    F_KA, F_KB = ROW_IDX["kindA"], ROW_IDX["kindB"]
+
+    def kernel(start_ref, plen_ref, tab_ref,
                pdec_ref, pact_ref, esrc_ref, hwi_ref, hwf_ref, gidx_ref,
                mem_ref, regs_ref, rout_ref, pc_ref, done_ref, tcc_ref,
                eacc_ref, prev_ref, nexec_ref,
                omem_ref, oregs_ref, orout_ref, opc_ref, odone_ref,
                otcc_ref, oeacc_ref, oprev_ref, onexec_ref):
         start = start_ref[0]
-        ops_t = ops_ref[...]
-        dest_t = dest_ref[...]
-        srcA_t = srcA_ref[...]
-        srcB_t = srcB_ref[...]
-        imm_t = imm_ref[...]
-        isld_t = isld_ref[...]
-        isst_t = isst_ref[...]
-        wr_t = wr_ref[...]
-        kA_t = kA_ref[...]
-        kB_t = kB_ref[...]
+        tab = tab_ref[...]                     # (G*T, N_ROW_FIELDS, P)
         p_dec = pdec_ref[...]
         p_act = pact_ref[...]
         e_src = esrc_ref[...]
@@ -176,9 +176,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         dma_per_pe = hw_i[:, 4]
         t_mem = hw_i[:, 5]
         smul_scale = hwf_ref[...]
-        # per-lane program: row gathers are based at gi * T in the
-        # flattened (G*T, P) tables; the PC clips to this lane's true
-        # program length so padding never executes
+        # per-lane program: THE row fetch is based at gi * T in the fused
+        # (G*T, NF, P) table; the PC clips to this lane's true program
+        # length so padding never executes
         gi = gidx_ref[...]
         plen = plen_ref[...]
         base = gi * T
@@ -186,19 +186,26 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
         blk = smul_lat.shape[0]
         lane_rows = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
 
+        def fetch(row):
+            """(blk,) per-lane row index -> (blk, NF, P) fused rows: the
+            single gather that replaces the ten per-field gathers."""
+            return jnp.take(tab, row, axis=0, mode="clip")
+
         def step(k, carry):
-            mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec = carry
+            (mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec,
+             cur, has_prev, p_ops, p_srcA, p_srcB) = carry
             budget_ok = start + k < max_steps
             live = (done == 0) & budget_ok                    # (blk,)
-            row = base + pc
-            op_row = _gather_rows(ops_t, row)                 # (blk, P)
-            imm_row = _gather_rows(imm_t, row)
-            a = _operands(_gather_rows(srcA_t, row), imm_row, regs, rout)
-            b = _operands(_gather_rows(srcB_t, row), imm_row, regs, rout)
+            op_row = cur[:, F_OPS, :]                         # (blk, P)
+            imm_row = cur[:, F_IMM, :]
+            srcA_row = cur[:, F_SRCA, :]
+            srcB_row = cur[:, F_SRCB, :]
+            a = _operands(srcA_row, imm_row, regs, rout)
+            b = _operands(srcB_row, imm_row, regs, rout)
 
             # ---- memory --------------------------------------------------
-            is_load = _gather_rows(isld_t, row) > 0
-            is_store = _gather_rows(isst_t, row) > 0
+            is_load = cur[:, F_ISLD, :] > 0
+            is_store = cur[:, F_ISST, :] > 0
             direct = (op_row == OP_LWD) | (op_row == OP_SWD)
             addr = jnp.where(direct, imm_row, a) % M
             load_val = jnp.take_along_axis(mem, addr, axis=1)
@@ -210,9 +217,9 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             # ---- ALU + writeback -----------------------------------------
             alu = alu_select(op_row, a, b)
             result = jnp.where(is_load, load_val, alu)
-            writes = _gather_rows(wr_t, row) > 0
+            writes = cur[:, F_WR, :] > 0
             rout_new = jnp.where(writes, result, rout)
-            d_row = _gather_rows(dest_t, row)
+            d_row = cur[:, F_DEST, :]
             regs_new = jnp.stack(
                 [jnp.where(writes & (d_row == r), result, regs[:, r, :])
                  for r in range(4)], axis=1)
@@ -245,18 +252,15 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
             wait = jnp.maximum(lat[:, None] - busy, 0).astype(jnp.float32)
             active = jnp.maximum(busy - 1, 0).astype(jnp.float32)
             gate = jnp.where(smul & ((a == 0) | (b == 0)), mulzero, 1.0)
-            prev_ok = (prev_pc >= 0)[:, None]
-            prev_row = base + jnp.maximum(prev_pc, 0)
-            op_ch = prev_ok & (op_row != _gather_rows(ops_t, prev_row))
-            a_ch = prev_ok & (_gather_rows(srcA_t, row)
-                              != _gather_rows(srcA_t, prev_row))
-            b_ch = prev_ok & (_gather_rows(srcB_t, row)
-                              != _gather_rows(srcB_t, prev_row))
+            prev_ok = has_prev[:, None]
+            op_ch = prev_ok & (op_row != p_ops)
+            a_ch = prev_ok & (srcA_row != p_srcA)
+            b_ch = prev_ok & (srcB_row != p_srcB)
             e_step = (p_dec[op_row] * scale
                       + p_act[op_row] * scale * gate * active
                       + p_idle * wait
-                      + e_src[_gather_rows(kA_t, row)]
-                      + e_src[_gather_rows(kB_t, row)]
+                      + e_src[cur[:, F_KA, :]]
+                      + e_src[cur[:, F_KB, :]]
                       + op_ch * e_sw_op
                       + (a_ch.astype(jnp.float32)
                          + b_ch.astype(jnp.float32)) * e_sw_mux
@@ -264,21 +268,40 @@ def build_sweep_kernel(*, rows: int, cols: int, mem_size: int,
 
             # ---- live-masked state advance -------------------------------
             lv = live[:, None]
+            new_pc = jnp.where(live, next_pc, pc)
+            # double buffer: prefetch the row the NEXT iteration executes,
+            # so the (narrow) fetch overlaps this step's execute data flow
+            new_cur = fetch(base + new_pc)
             return (mem,                       # stores already live-masked
                     jnp.where(lv[:, :, None], regs_new, regs),
                     jnp.where(lv, rout_new, rout),
-                    jnp.where(live, next_pc, pc),
+                    new_pc,
                     jnp.where(live & exited, 1, done).astype(jnp.int32),
                     jnp.where(live, t_cc + lat, t_cc),
                     e_acc + jnp.where(live, e_step, 0.0),
                     jnp.where(live, pc, prev_pc),
-                    jnp.where(live, n_exec + 1, n_exec))
+                    jnp.where(live, n_exec + 1, n_exec),
+                    new_cur,
+                    has_prev | live,
+                    jnp.where(lv, op_row, p_ops),
+                    jnp.where(lv, srcA_row, p_srcA),
+                    jnp.where(lv, srcB_row, p_srcB))
 
-        carry = (mem_ref[...], regs_ref[...], rout_ref[...], pc_ref[...],
-                 done_ref[...], tcc_ref[...], eacc_ref[...], prev_ref[...],
-                 nexec_ref[...])
+        pc0 = pc_ref[...]
+        prev_pc0 = prev_ref[...]
+        # seed the double buffer + the carried switch-energy reference rows
+        # (re-fetched once per CHUNK from the persisted prev_pc, vs once
+        # per STEP in the original engine)
+        cur0 = fetch(base + pc0)
+        pfr = fetch(base + jnp.maximum(prev_pc0, 0))
+        carry = (mem_ref[...], regs_ref[...], rout_ref[...], pc0,
+                 done_ref[...], tcc_ref[...], eacc_ref[...], prev_pc0,
+                 nexec_ref[...],
+                 cur0, prev_pc0 >= 0,
+                 pfr[:, F_OPS, :], pfr[:, F_SRCA, :], pfr[:, F_SRCB, :])
         carry = jax.lax.fori_loop(0, k_steps, step, carry)
-        mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec = carry
+        (mem, regs, rout, pc, done, t_cc, e_acc, prev_pc, n_exec,
+         _, _, _, _, _) = carry
         omem_ref[...] = mem
         oregs_ref[...] = regs
         orout_ref[...] = rout

@@ -6,9 +6,9 @@ bit-identical latency, checksum and executed-step counts, energy equal
 to float32 accumulation order.  Given a single ``Program`` it returns
 ``fn(mem_init (B, M), hw batched (B,))``; given a program sequence or a
 ``ProgramBatch`` it returns ``fn(mem_init, hw, prog_idx)`` and each lane
-gathers its kernel's rows from the stacked (G*T_max, P) tables inside
-the kernel -- the program axis is swept as data, through one compiled
-engine.
+fetches its kernel's instructions -- one fused-row gather per step --
+from the fused (G*T_max, N_ROW_FIELDS, P) table inside the kernel: the
+program axis is swept as data, through one compiled engine.
 
 The program tables, per-program lengths and profile vectors are
 *operands* of an lru-cached jitted core (one per static configuration),
@@ -38,7 +38,8 @@ from ...core import isa
 from ...core.characterization import Profile
 from ...core.hwconfig import HwConfig
 from ...core.memory import DEFAULT_MAX_BANKS, validate_bank_bound
-from ...core.program import Program, as_program_batch, batch_tables
+from ...core.program import (N_ROW_FIELDS, Program, as_program_batch,
+                             batch_tables, fused_rows)
 from .kernel import HW_INT_FIELDS, build_sweep_kernel
 
 
@@ -63,7 +64,7 @@ def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
         max_steps=max_steps, max_banks=max_banks, n_progs=G,
         p_idle=p_idle, e_sw_op=e_sw_op, e_sw_mux=e_sw_mux, mulzero=mulzero)
 
-    def _chunk_call(Bp, start, tabs, plen, prof, hw_i, hw_f, gidx,
+    def _chunk_call(Bp, start, tab, plen, prof, hw_i, hw_f, gidx,
                     mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec):
         grid = (Bp // blk_b,)
         bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
@@ -72,7 +73,8 @@ def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
                                           lambda i: (i,) + (0,) * len(rest))
         state_specs = [lane(M), lane(4, P), lane(P), lane1, lane1, lane1,
                        lane1, lane1, lane1]
-        in_specs = ([bcast((1,)), bcast((G,))] + [bcast((G * T, P))] * 10
+        in_specs = ([bcast((1,)), bcast((G,)),
+                     bcast((G * T, N_ROW_FIELDS, P))]
                     + [bcast((isa.N_OPS,))] * 2 + [bcast((isa.N_SRC_KINDS,))]
                     + [lane(len(HW_INT_FIELDS)), lane1, lane1] + state_specs)
         out_shape = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in
@@ -80,11 +82,11 @@ def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
         return pl.pallas_call(
             kern, grid=grid, in_specs=in_specs, out_specs=state_specs,
             out_shape=out_shape, interpret=interpret,
-        )(start, plen, *tabs, *prof, hw_i, hw_f, gidx,
+        )(start, plen, tab, *prof, hw_i, hw_f, gidx,
           mem, regs, rout, pc, done, t_cc, e_acc, prev, n_exec)
 
     @jax.jit
-    def _fn(tabs, plen, prof, mem_init: jnp.ndarray, hw: HwConfig,
+    def _fn(tab, plen, prof, mem_init: jnp.ndarray, hw: HwConfig,
             prog_idx) -> "SweepResult":
         TRACE_COUNTS["pallas"] += 1       # trace-time only: retrace probe
         mem0 = jnp.asarray(mem_init, jnp.int32)
@@ -121,7 +123,7 @@ def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
         def body(c):
             t0, st = c
             start = jnp.full((1,), t0, jnp.int32)
-            st = _chunk_call(Bp, start, tabs, plen, prof, hw_i, hw_f, gidx,
+            st = _chunk_call(Bp, start, tab, plen, prof, hw_i, hw_f, gidx,
                              *st)
             return (t0 + K, tuple(st))
 
@@ -168,15 +170,10 @@ def make_pallas_sweep_fn(program, profile: Profile, *,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    # Stacked program tables flattened to (G*T, P): one HBM read per tile,
-    # every lane gathers its kernel's rows by prog_idx * T + pc.
-    flat = lambda x, dt: jnp.asarray(x, dt).reshape(G * T, P)
-    tabs = (flat(tables.ops, jnp.int32), flat(tables.dest, jnp.int32),
-            flat(tables.srcA, jnp.int32), flat(tables.srcB, jnp.int32),
-            flat(tables.imm, jnp.int32), flat(tables.is_load, jnp.int32),
-            flat(tables.is_store, jnp.int32),
-            flat(tables.writes_rout, jnp.int32),
-            flat(tables.kindA, jnp.int32), flat(tables.kindB, jnp.int32))
+    # The fused row table (G*T, N_ROW_FIELDS, P): one HBM read per tile,
+    # every lane fetches its whole instruction with ONE gather of row
+    # prog_idx * T + pc (see kernel.py docstring).
+    tab = jnp.asarray(fused_rows(tables))
     plen = jnp.asarray(batch.n_instrs, jnp.int32)          # (G,)
     prof = (jnp.asarray(profile.p_dec, jnp.float32),
             jnp.asarray(profile.p_act, jnp.float32),
@@ -197,12 +194,12 @@ def make_pallas_sweep_fn(program, profile: Profile, *,
                 validate_bank_bound(hw.n_banks, max_banks,
                                     where="cgra_sweep (backend='pallas')")
             gi = jnp.zeros((jnp.shape(mem_init)[0],), jnp.int32)
-            return core(tabs, plen, prof, mem_init, hw, gi)
+            return core(tab, plen, prof, mem_init, hw, gi)
     else:
         def fn(mem_init: jnp.ndarray, hw: HwConfig, prog_idx):
             if validate:
                 validate_bank_bound(hw.n_banks, max_banks,
                                     where="cgra_sweep (backend='pallas')")
-            return core(tabs, plen, prof, mem_init, hw, prog_idx)
+            return core(tab, plen, prof, mem_init, hw, prog_idx)
 
     return fn

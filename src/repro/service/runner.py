@@ -45,7 +45,7 @@ import hashlib
 import json
 import time
 from pathlib import Path
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,7 @@ import numpy as np
 from ..checkpoint import CheckpointManager
 from ..checkpoint.manager import load_tree
 from ..core import dse
+from ..core.autotune import AUTO, ShapeClass, default_cache
 from ..core.characterization import Profile
 from ..core.dse import GridPlan, SweepResult
 from ..runtime import plan_downscale
@@ -164,8 +165,10 @@ class ResumableSweepRunner:
                  programs=None, plan: Optional[GridPlan] = None,
                  ckpt_dir: Optional[str] = None, unit_size: int = 64,
                  max_steps: int = 2048, mem_size: int = 4096,
-                 backend: str = "xla", chunk_steps: Optional[int] = 64,
-                 blk_b: int = 32, interpret: Optional[bool] = None,
+                 backend: str = "xla",
+                 chunk_steps: Union[int, None, str] = AUTO,
+                 blk_b: Union[int, str] = AUTO,
+                 interpret: Optional[bool] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  retry: Optional[RetryPolicy] = None,
                  injector: Optional[FaultInjector] = None,
@@ -189,8 +192,20 @@ class ResumableSweepRunner:
         self.max_steps = max_steps
         self.mem_size = mem_size
         self.backend = backend
-        self.chunk_steps = chunk_steps
-        self.blk_b = blk_b
+        # AUTO knobs resolve through the per-shape autotune cache using
+        # the service's lane-shape proxy (H = lanes per program, D = 1);
+        # explicit values always win.  Resolution happens HERE so the
+        # campaign fingerprint hashes concrete ints -- a checkpoint is
+        # resumable regardless of later cache changes.
+        G = plan.batch.n_programs
+        shape = ShapeClass(G=G, t_max=plan.batch.t_max,
+                           H=max(1, plan.n_lanes // max(G, 1)), D=1,
+                           backend=backend, n_devices=self._initial_ndev)
+        cfg = default_cache().resolve(shape, blk_b=blk_b,
+                                      chunk_steps=chunk_steps, max_buckets=1)
+        self.chunk_steps = cfg.chunk_steps
+        self.blk_b = cfg.blk_b
+        self.tuned_source = cfg.source       # "explicit" | "cache" | "default"
         self.interpret = interpret
         self.retry = retry or RetryPolicy()
         self.injector = injector

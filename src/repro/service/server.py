@@ -14,6 +14,14 @@ continuous-batching pattern applies:
     gather by index), so one ``ResumableSweepRunner`` -- one compiled
     executable -- serves all of them.  Each request owns a contiguous
     lane span of the merged grid.
+  * **length-bucketed packing**: a merged grid runs every lane to the
+    convoy of its longest kernel, so a 3-instruction request packed
+    with a 300-instruction one pays 100x padding waste.  ``_admit``
+    therefore buckets the FIFO window by each request's longest kernel
+    (``program.bucket_boundaries``, up to ``max_buckets`` groups) and
+    packs only the oldest request's bucket into the slot; the other
+    buckets stay queued (FIFO order preserved) and fill the next free
+    slots.  Compiled engines grow by at most the bucket count.
   * **slots**: up to ``slots`` merged campaigns are in flight; ``step``
     advances each by one work unit (continuous batching at unit
     granularity).  A finished campaign frees its slot and the next
@@ -42,10 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.autotune import AUTO, DEFAULT_MAX_BUCKETS, is_auto
 from ..core.characterization import Profile
 from ..core.dse import GridPlan
 from ..core.hwconfig import stack_configs
-from ..core.program import pack_programs
+from ..core.program import bucket_boundaries, pack_programs
 from .runner import RESULT_FIELDS, ResumableSweepRunner, RetryPolicy
 
 
@@ -145,6 +154,7 @@ class SweepService:
                  queue_max: int = 16, pack_max_lanes: int = 256,
                  unit_size: int = 8, max_steps: int = 2048,
                  mem_size: int = 4096, backend: str = "xla",
+                 max_buckets=AUTO,
                  retry: Optional[RetryPolicy] = None,
                  clock: Callable[[], float] = time.monotonic,
                  runner_kw: Optional[dict] = None):
@@ -156,6 +166,11 @@ class SweepService:
         self.max_steps = max_steps
         self.mem_size = mem_size
         self.backend = backend
+        # bucket count of length-bucketed admission; AUTO = the static
+        # default (the admission window's length mix is not a stable
+        # shape class, so no per-shape cache lookup here)
+        self.max_buckets = DEFAULT_MAX_BUCKETS if is_auto(max_buckets) \
+            else max(1, int(max_buckets))
         self.retry = retry
         self.clock = clock
         self.runner_kw = dict(runner_kw or {})
@@ -163,6 +178,9 @@ class SweepService:
         self._slots: List[Optional[_Slot]] = [None] * slots
         self.completed: Dict[int, RequestResult] = {}
         self._next_rid = 0
+        # admission audit trail: one record per packed slot, for tests
+        # and ops visibility ({rids, t_max, window_tmaxes})
+        self.admission_log: List[dict] = []
 
     # -- admission ----------------------------------------------------------
     def submit(self, request: SweepRequest) -> int:
@@ -184,7 +202,10 @@ class SweepService:
 
     def _admit(self):
         """Fill free slots: greedily pack queued requests (FIFO) into a
-        merged grid up to ``pack_max_lanes`` lanes per slot."""
+        merged grid up to ``pack_max_lanes`` lanes per slot, then keep
+        only the oldest request's *length bucket* -- requests whose
+        longest kernel would convoy (or be convoyed by) the rest go back
+        to the queue front, FIFO order preserved, and fill later slots."""
         for si in range(self.slots):
             if self._slots[si] is not None or not self.queue:
                 continue
@@ -195,7 +216,20 @@ class SweepService:
                     break
                 pack.append(self.queue.popleft())
                 lanes += n
+            tmaxes = [max(p.n_instrs for p in list(r.programs))
+                      for r in pack]
+            if len(pack) > 1 and self.max_buckets > 1:
+                groups = bucket_boundaries(tmaxes, self.max_buckets)
+                keep = next(set(g) for g in groups if 0 in g)
+                rest = [r for i, r in enumerate(pack) if i not in keep]
+                pack = [r for i, r in enumerate(pack) if i in keep]
+                for r in reversed(rest):
+                    self.queue.appendleft(r)
             plan, members = _merge_plans(pack)
+            self.admission_log.append({
+                "rids": [r.rid for r in pack],
+                "t_max": int(plan.batch.t_max),
+                "window_tmaxes": [int(t) for t in tmaxes]})
             runner = ResumableSweepRunner(
                 plan=plan, profile=self.profile, unit_size=self.unit_size,
                 max_steps=self.max_steps, mem_size=self.mem_size,

@@ -8,6 +8,7 @@ retrace across programs (``dse.TRACE_COUNTS`` deltas), unsharded and
 mesh-sharded, and cross-checked against the independent trace-based
 estimator.
 """
+import json
 import os
 import subprocess
 import sys
@@ -19,10 +20,13 @@ import pytest
 import jax
 
 from repro.core import dse, estimator
+from repro.core.autotune import (AutotuneCache, ShapeClass, TunedConfig,
+                                 default_cache, tune_sweep)
 from repro.core.cgra import run_program
 from repro.core.hwconfig import TOPOLOGIES, baseline, stack_configs
 from repro.core.isa import OP, asm
 from repro.core.program import (Program, ProgramBuilder, as_program_batch,
+                                bucket_boundaries, bucket_programs,
                                 pack_programs)
 
 MEM = 256
@@ -295,3 +299,265 @@ def test_packed_grid_sharded_8_devices():
                        timeout=1200)
     assert "PACKED_SHARDED_OK" in r.stdout, (r.stdout[-1500:],
                                              r.stderr[-1500:])
+
+# ---------------------------------------------------------------------------
+# Tentpole: length-bucketed packing -- grouping mechanics, bit-identity,
+# bounded trace counts, held-plan steady state
+# ---------------------------------------------------------------------------
+
+def _mixed_programs_4():
+    """Two length classes (5 and 3 instrs) -> two buckets."""
+    return [_loop_program(10, "l0"), _short_program("s0"),
+            _loop_program(4, "l1", stride=2), _short_program("s1", addr=9)]
+
+
+def test_bucket_boundaries_minimizes_padded_slots():
+    """The DP picks the contiguous-by-length grouping minimizing
+    sum(count * max_len); groups carry original indices ascending,
+    ordered by ascending length."""
+    lengths = [100, 3, 98, 4, 5, 101]
+    assert bucket_boundaries(lengths, 2) == [[1, 3, 4], [0, 2, 5]]
+    # one bucket allowed -> everything together
+    assert bucket_boundaries(lengths, 1) == [[0, 1, 2, 3, 4, 5]]
+    # equal lengths merge for free (ties pick the fewest buckets)
+    assert bucket_boundaries([5, 5, 3], 3) == [[2], [0, 1]]
+
+
+def test_bucket_programs_partition_and_tmax():
+    progs = _mixed_programs_4()
+    bk = bucket_programs(progs, 4)
+    assert bk.n_buckets == 2
+    assert sorted(i for g in bk.groups for i in g) == [0, 1, 2, 3]
+    for bi, g in enumerate(bk.groups):
+        assert bk.batches[bi].t_max == max(progs[i].n_instrs for i in g)
+        for i in g:
+            assert bk.assignment[i] == bi
+    # bucketing never pads more than one big batch would
+    one = pack_programs(progs)
+    assert bk.padded_slots <= one.n_programs * one.t_max
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_bucketed_sweep_bit_identical(backend, profile):
+    """max_buckets>1 == max_buckets=1 == per-program loop, on both
+    backends (discrete fields exact, energy ULP-tight across the
+    different compiled batch shapes)."""
+    progs = _mixed_programs_4()
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    mems = _images()
+    kw = _backend_kw(backend)
+    bucketed = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                         mem_images=mems, max_buckets=4, **kw)
+    flat = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                     mem_images=mems, max_buckets=1, **kw)
+    parts = [dse.sweep(p, profile, hws, mems, **kw) for p in progs]
+    loop = jax.tree.map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]), *parts)
+    for ref in (flat, loop):
+        for f in ("latency_cc", "checksum", "steps_executed"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(bucketed, f)),
+                np.asarray(getattr(ref, f)), err_msg=f)
+        np.testing.assert_allclose(np.asarray(bucketed.energy_pj),
+                                   np.asarray(ref.energy_pj), rtol=1e-5)
+
+
+def test_bucketed_trace_counts_bounded(profile):
+    """A bucketed multi-kernel sweep costs at most one trace per bucket
+    (not per program), and a second call costs zero."""
+    progs = _mixed_programs_4()
+    hws = [baseline()]
+    mems = _images()
+    bk = bucket_programs(progs, 4)
+    before = dse.TRACE_COUNTS["xla"]
+    kw = dict(profile=profile, hw_configs=hws, mem_images=mems,
+              mem_size=MEM, max_steps=MAX_STEPS, backend="xla",
+              max_buckets=4, blk_b=4)
+    dse.sweep(programs=progs, **kw)
+    assert dse.TRACE_COUNTS["xla"] - before <= bk.n_buckets
+    mid = dse.TRACE_COUNTS["xla"]
+    dse.sweep(programs=progs, **kw)
+    assert dse.TRACE_COUNTS["xla"] == mid, "steady state must not retrace"
+
+
+def test_bucketed_held_plan_matches_sweep(profile):
+    """make_bucketed_sweep_fn holds the plan across calls and stays
+    bit-identical to the one-shot sweep()."""
+    progs = _mixed_programs_4()
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    mems = _images()
+    fn = dse.make_bucketed_sweep_fn(progs, profile, hws, mems,
+                                    mem_size=MEM, max_steps=MAX_STEPS,
+                                    backend="xla", blk_b=4)
+    assert fn.buckets.n_buckets == 2
+    ref = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                    mem_images=mems, mem_size=MEM, max_steps=MAX_STEPS,
+                    backend="xla", blk_b=4)
+    got = fn()
+    again = fn()
+    for f in ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+        np.testing.assert_array_equal(np.asarray(got._asdict()[f]),
+                                      np.asarray(again._asdict()[f]),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-shape autotune cache -- round-trip, tolerant load,
+# resolve precedence, tuned winners actually consulted
+# ---------------------------------------------------------------------------
+
+_SHAPE = ShapeClass(G=4, t_max=8, H=5, D=2, backend="xla")
+
+
+def test_autotune_cache_roundtrips(tmp_path):
+    path = tmp_path / "autotune.json"
+    c1 = AutotuneCache(path)
+    assert c1.lookup(_SHAPE) is None
+    c1.store(_SHAPE, TunedConfig(blk_b=16, chunk_steps=32, max_buckets=2,
+                                 source="tuned", points_per_s=123.0))
+    got = AutotuneCache(path).lookup(_SHAPE)       # fresh load from disk
+    assert (got.blk_b, got.chunk_steps, got.max_buckets) == (16, 32, 2)
+    assert got.source == "cache"
+    r = AutotuneCache(path).resolve(_SHAPE)
+    assert (r.blk_b, r.chunk_steps, r.max_buckets) == (16, 32, 2)
+    assert r.source == "cache"
+    # chunk_steps=None ("chunking disabled") survives the round-trip
+    c1.store(_SHAPE, TunedConfig(blk_b=8, chunk_steps=None, max_buckets=1,
+                                 source="tuned"))
+    assert AutotuneCache(path).lookup(_SHAPE).chunk_steps is None
+
+
+def test_autotune_cache_corrupt_or_stale_ignored(tmp_path):
+    """Unreadable / invalid / wrong-version / malformed caches degrade
+    to static defaults -- never fatal."""
+    corrupt = tmp_path / "corrupt.json"
+    corrupt.write_text("{this is not json")
+    c = AutotuneCache(corrupt)
+    r = c.resolve(_SHAPE)
+    assert r.source == "default"
+    # a store over the corrupt file repairs it (atomic rewrite)
+    c.store(_SHAPE, TunedConfig(blk_b=8, chunk_steps=16, max_buckets=1,
+                                source="tuned"))
+    assert AutotuneCache(corrupt).lookup(_SHAPE).blk_b == 8
+
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 999, "entries": {
+        _SHAPE.key: {"blk_b": 8, "chunk_steps": 16, "max_buckets": 1}}}))
+    assert AutotuneCache(stale).entries == {}
+
+    malformed = tmp_path / "malformed.json"
+    malformed.write_text(json.dumps({"version": 1, "entries": {
+        _SHAPE.key: {"blk_b": "wat", "chunk_steps": 16,
+                     "max_buckets": 1}}}))
+    assert AutotuneCache(malformed).entries == {}
+
+
+def test_autotune_resolve_explicit_beats_cache(tmp_path):
+    c = AutotuneCache(tmp_path / "c.json")
+    c.store(_SHAPE, TunedConfig(blk_b=16, chunk_steps=32, max_buckets=2,
+                                source="tuned"))
+    r = c.resolve(_SHAPE, blk_b=4, chunk_steps=None, max_buckets=1)
+    assert (r.blk_b, r.chunk_steps, r.max_buckets) == (4, None, 1)
+    assert r.source == "explicit"
+    # partially explicit: pinned knob wins, AUTO knobs fill from cache
+    r2 = c.resolve(_SHAPE, blk_b=4)
+    assert (r2.blk_b, r2.chunk_steps, r2.max_buckets) == (4, 32, 2)
+    assert r2.source == "cache"
+
+
+def test_default_cache_follows_env(tmp_path, monkeypatch):
+    target = tmp_path / "env-cache.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(target))
+    assert default_cache().path == target
+
+
+def test_tune_sweep_persists_winner_and_sweep_consults_it(
+        tmp_path, monkeypatch, profile):
+    """tune_sweep times the candidates, stores the winner under the
+    sweep's shape class, and a later AUTO-knob sweep of that shape picks
+    it up (still bit-identical to the untuned sweep)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                       str(tmp_path / "tuned.json"))
+    progs = _mixed_programs()
+    hws = [baseline()]
+    mems = _images()
+    cfg = tune_sweep(progs, profile, hws, mems, backend="xla",
+                     max_steps=MAX_STEPS, mem_size=MEM,
+                     candidates=[
+                         dict(max_buckets=1, chunk_steps=16, blk_b=4),
+                         dict(max_buckets=2, chunk_steps=24, blk_b=4)],
+                     repeats=1)
+    assert cfg.source == "tuned" and cfg.points_per_s > 0
+    shape = ShapeClass(G=3, t_max=pack_programs(progs).t_max,
+                       H=len(hws), D=mems.shape[0], backend="xla")
+    hit = default_cache().lookup(shape)
+    assert hit is not None and hit.chunk_steps in (16, 24)
+    tuned = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                      mem_images=mems, mem_size=MEM, max_steps=MAX_STEPS,
+                      backend="xla")
+    pinned = dse.sweep(programs=progs, profile=profile, hw_configs=hws,
+                       mem_images=mems, mem_size=MEM, max_steps=MAX_STEPS,
+                       backend="xla", chunk_steps=None, blk_b=4,
+                       max_buckets=1)
+    for f in ("latency_cc", "checksum", "steps_executed"):
+        np.testing.assert_array_equal(np.asarray(getattr(tuned, f)),
+                                      np.asarray(getattr(pinned, f)),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the service's length-bucketed admission
+# ---------------------------------------------------------------------------
+
+def test_service_buckets_mixed_length_requests(profile):
+    """Mixed-length requests in one admission window split into
+    same-length packs (oldest request's bucket first); same-length
+    requests still co-pack.  The admission log records the packs."""
+    from repro.service import SweepRequest, SweepService
+
+    hws = [baseline()]
+    mems = np.zeros((1, MEM), np.int32)
+    lng = SweepRequest(programs=[_loop_program(10, "lng")],
+                       hw_configs=hws, mem_images=mems)
+    sht = SweepRequest(programs=[_short_program("sht")],
+                       hw_configs=hws, mem_images=mems)
+    lng2 = SweepRequest(programs=[_loop_program(6, "lng2", stride=2)],
+                        hw_configs=hws, mem_images=mems)
+    svc = SweepService(profile, slots=1, unit_size=2, max_steps=MAX_STEPS,
+                       mem_size=MEM)
+    svc.submit(lng)
+    svc.submit(sht)
+    svc.submit(lng2)
+    out = svc.drain()
+    assert set(out) == {lng.rid, sht.rid, lng2.rid}
+    assert [rec["rids"] for rec in svc.admission_log] == \
+        [[lng.rid, lng2.rid], [sht.rid]]
+    # each pack ran at its own padded length, not the window max
+    assert svc.admission_log[0]["t_max"] == _loop_program(10, "x").n_instrs
+    assert svc.admission_log[1]["t_max"] == _short_program("x").n_instrs
+    for req in (lng, sht, lng2):
+        assert not out[req.rid].expired
+        assert out[req.rid].skipped_lanes == 0
+
+
+def test_service_max_buckets_1_packs_whole_window(profile):
+    """max_buckets=1 restores the old admission: one merged pack."""
+    from repro.service import SweepRequest, SweepService
+
+    hws = [baseline()]
+    mems = np.zeros((1, MEM), np.int32)
+    reqs = [SweepRequest(programs=[_loop_program(10, "a")],
+                         hw_configs=hws, mem_images=mems),
+            SweepRequest(programs=[_short_program("b")],
+                         hw_configs=hws, mem_images=mems)]
+    svc = SweepService(profile, slots=1, unit_size=2, max_steps=MAX_STEPS,
+                       mem_size=MEM, max_buckets=1)
+    for r in reqs:
+        svc.submit(r)
+    out = svc.drain()
+    assert set(out) == {reqs[0].rid, reqs[1].rid}
+    assert [rec["rids"] for rec in svc.admission_log] == \
+        [[reqs[0].rid, reqs[1].rid]]
