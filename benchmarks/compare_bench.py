@@ -17,6 +17,10 @@ Gated metrics and tolerances (rel = allowed fractional drop vs baseline):
                                                steady-state vs per-program
                                                loop at each grid scale
   multi_kernel[G].compile_speedup   rel 0.25   higher is better
+  reduction[spec].steady_ratio      rel 0.15   higher is better -- the
+                                               unreduced/reduced steady
+                                               seconds of the on-device
+                                               reduction lane
   mem_completion.speedup            rel 0.50   higher is better (tiny
                                                timings, noisiest ratio)
   recovery.checkpoint_overhead_pct  abs +8.0   lower is better (percentage
@@ -26,6 +30,23 @@ Hard invariants checked on the *current* run alone (no baseline needed):
 
   multi_kernel[G].trace_counts_packed <= n_buckets   zero-retrace property
                                                      of the bucketed path
+  reduction[spec].bytes_reduced < bytes_full         O(G*K) transfer
+  reduction[spec].reduced_matches_oracle             device == numpy oracle
+  reduction[spec].steady_ratio >= 0.9                reducing never costs
+                                                     >10% steady throughput
+                                                     (full-size runs only:
+                                                     at smoke sizes the
+                                                     reducer's fixed cost
+                                                     dominates the tiny
+                                                     grid, so smoke relies
+                                                     on the baseline-
+                                                     relative gate above)
+
+Check the invariants of an already-written record (CI does this for the
+committed full-size BENCH_sim_throughput.json without re-running it):
+
+  PYTHONPATH=src python -m benchmarks.compare_bench \
+      --invariants-only BENCH_sim_throughput.json
 
 Refresh the baseline after an intentional perf change with:
 
@@ -44,6 +65,11 @@ from typing import List, Tuple
 MK_REL_TOL = {"steady_ratio": 0.15, "compile_speedup": 0.25}
 MEM_SPEEDUP_REL_TOL = 0.50
 CKPT_OVERHEAD_ABS_TOL = 8.0  # percentage points
+# Reduction lane (per-spec rows): baseline-relative floor on the
+# unreduced/reduced steady ratio, plus the hard floor below -- reducing
+# on device must never cost more than 10% steady throughput.
+REDUCTION_REL_TOL = 0.15
+REDUCTION_STEADY_FLOOR = 0.9
 
 
 def _mk_rows(payload: dict) -> dict:
@@ -52,6 +78,11 @@ def _mk_rows(payload: dict) -> dict:
     if isinstance(rows, dict):  # pre-bucketing single-row payloads
         rows = [rows]
     return {int(r["G"]): r for r in rows}
+
+
+def _red_rows(payload: dict) -> dict:
+    """Index reduction rows by spec string."""
+    return {str(r["spec"]): r for r in payload.get("reduction", [])}
 
 
 def check_invariants(current: dict) -> List[str]:
@@ -67,6 +98,25 @@ def check_invariants(current: dict) -> List[str]:
                 f"multi_kernel[G={g}]: trace_counts_packed={traces} > "
                 f"n_buckets={n_buckets} (retrace regression: the packed "
                 "path must reuse one cached executable per bucket)")
+    for spec, row in sorted(_red_rows(current).items()):
+        full_b = row.get("bytes_full_per_sweep")
+        red_b = row.get("bytes_reduced_per_sweep")
+        if full_b is not None and red_b is not None and red_b >= full_b:
+            errors.append(
+                f"reduction[{spec}]: bytes_reduced_per_sweep={red_b} >= "
+                f"bytes_full_per_sweep={full_b} (the O(G*K) transfer "
+                "contract is broken)")
+        if row.get("reduced_matches_oracle") is False:
+            errors.append(
+                f"reduction[{spec}]: device candidates diverged from the "
+                "numpy oracle (correctness regression)")
+        sr = row.get("steady_ratio")
+        if (not current.get("smoke")
+                and sr is not None and float(sr) < REDUCTION_STEADY_FLOOR):
+            errors.append(
+                f"reduction[{spec}]: steady_ratio={float(sr):.3f} < "
+                f"{REDUCTION_STEADY_FLOOR} (on-device reduction costs "
+                "more than 10% steady throughput)")
     return errors
 
 
@@ -96,6 +146,17 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
                             float(base_mk[g][metric]),
                             float(cur_mk[g][metric]), tol)
 
+    base_red, cur_red = _red_rows(baseline), _red_rows(current)
+    for spec in sorted(base_red):
+        if spec not in cur_red:
+            failures.append(f"reduction[{spec}]: row present in baseline "
+                            "but missing from current run")
+            continue
+        gate_higher(f"reduction[{spec}].steady_ratio",
+                    float(base_red[spec]["steady_ratio"]),
+                    float(cur_red[spec]["steady_ratio"]),
+                    REDUCTION_REL_TOL)
+
     b_mem = baseline.get("mem_completion", {}).get("speedup")
     c_mem = current.get("mem_completion", {}).get("speedup")
     if b_mem is not None and c_mem is not None:
@@ -121,7 +182,22 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
 
 def main(argv) -> int:
     update = "--update-baseline" in argv
-    argv = [a for a in argv if a != "--update-baseline"]
+    inv_only = "--invariants-only" in argv
+    argv = [a for a in argv
+            if a not in ("--update-baseline", "--invariants-only")]
+    if inv_only:
+        if len(argv) != 1:
+            print("usage: python -m benchmarks.compare_bench "
+                  "--invariants-only <current.json>")
+            return 2
+        current = json.loads(Path(argv[0]).read_text())
+        inv = check_invariants(current)
+        for e in inv:
+            print(f"[compare_bench] INVARIANT {e}")
+        if inv:
+            return 1
+        print(f"[compare_bench] {argv[0]}: all invariants hold")
+        return 0
     if len(argv) != 2:
         print("usage: python -m benchmarks.compare_bench "
               "[--update-baseline] <baseline.json> <current.json>")

@@ -1,7 +1,7 @@
 """The "instantaneous result" claim (paper Section 1): design points per
 second through the fused simulate+estimate sweep.
 
-Five comparisons, all machine-readable in BENCH_sim_throughput.json so
+Six comparisons, all machine-readable in BENCH_sim_throughput.json so
 the perf trajectory is trackable across PRs (schema: bench_schema.json,
 validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
@@ -16,6 +16,11 @@ validated in CI by benchmarks.validate_bench):
     compile seconds, per-bucket shapes, trace counts and the
     ``steady_ratio`` (packed/loop steady throughput -- the CI
     regression gate's key metric, >= 1 means packed wins) all recorded;
+  * on-device reduction lane: the bucketed packed sweep with and
+    without a ``reduce=`` spec (top-k / Pareto front computed inside
+    the compiled sweep) -- device->host result bytes drop from O(B) to
+    O(G*K) while steady throughput stays within noise, and the device
+    candidates are re-checked bit-identical to the numpy oracle;
   * the estimator's memory-contention scheduler: seed S x P Python loop
     vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16);
   * the crash-safe sweep service (service/runner): per-unit checkpoint
@@ -39,6 +44,7 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 from pathlib import Path
 
 import jax
@@ -283,6 +289,110 @@ def _bench_multi_kernel(rep: Report) -> list:
             _bench_multi_kernel_one(rep, _multi_kernels_g8())]
 
 
+def _bench_reduction(rep: Report) -> list:
+    """On-device reduction lane: million-point sweeps ship kilobytes.
+
+    The DSE-as-a-service contract (docs/performance.md "On-device
+    reduction"): a client asks for winners, not the grid, so the sweep
+    carries a ``reduce=`` spec and only ``O(G*K)`` candidate values ever
+    cross the device->host boundary instead of the five ``(B,)`` result
+    fields.  One row per spec (top-k by EDP, latency/energy Pareto
+    front), each comparing the held bucketed packed plan
+    (``dse.make_bucketed_sweep_fn`` -- the service steady state) with
+    and without on-device reduction over the identical grid:
+
+      * ``bytes_full_per_sweep`` / ``bytes_reduced_per_sweep``: the
+        device->host result bytes each steady-state call moves -- B*5*4
+        (analytic; the unreduced fn fetches all five fields to stitch
+        canonical lane order) vs ``reduced_nbytes`` (O(G*K), independent
+        of B);
+      * ``steady_ratio`` = unreduced/reduced steady seconds (>= 1 means
+        reducing is free or better; the CI gate floors it at 0.9 --
+        reduction must never cost more than 10% throughput);
+      * ``reduced_matches_oracle``: the device candidates are
+        bit-identical to the numpy oracle over the fetched full grid
+        (the correctness half of the contract, re-checked on every
+        bench run).
+    """
+    from repro.analysis.pareto import (REDUCED_FIELDS, ParetoFront, TopK,
+                                       reduce_oracle, reduced_nbytes,
+                                       spec_to_str)
+
+    prof = default_profile()
+    ks = _multi_kernels()
+    progs = [k.program for k in ks]
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    G, H = len(progs), len(hws)
+    max_steps = max(k.max_steps for k in ks)
+    M = max(k.mem_init.size for k in ks)
+    base = np.stack([np.asarray(
+        np.pad(np.asarray(k.mem_init), (0, M - k.mem_init.size)))
+        for k in ks]).astype(np.int32)
+    # widen the data axis so the lane count is service-sized: the
+    # transfer-bytes contrast is the whole point of this lane
+    imgs = np.tile(base, (4 if SMOKE else 32, 1))
+    D = imgs.shape[0]
+    B = G * H * D
+
+    fn_full = dse.make_bucketed_sweep_fn(progs, prof, hws, imgs,
+                                         max_steps=max_steps, mem_size=M,
+                                         backend="xla")
+    run_full = lambda: jax.block_until_ready(fn_full())
+    res_full = run_full()                                # compile + warm
+    fields = tuple(np.asarray(getattr(res_full, f))
+                   for f in res_full._fields)
+    prog_idx = np.repeat(np.arange(G), H * D)
+    lane_idx = np.arange(B)
+
+    rows = []
+    for spec in (TopK("edp", k=8),
+                 ParetoFront(axes=("latency_cc", "energy_pj"),
+                             max_points=16)):
+        fn_red = dse.make_bucketed_sweep_fn(progs, prof, hws, imgs,
+                                            max_steps=max_steps,
+                                            mem_size=M, backend="xla",
+                                            reduce=spec)
+        red = fn_red()                                   # compile + warm
+        # steady_ratio is the gated metric, so the two sides are timed
+        # *interleaved* (full, reduced, full, reduced, ...) and each
+        # takes its per-round minimum: host-speed drift during the
+        # measurement hits both sides equally instead of skewing the
+        # ratio the way two independently-taken medians would.
+        reps = 2 if SMOKE else 5
+        t_full, t_red = [], []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_full()
+            t_full.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            fn_red()
+            t_red.append(time.perf_counter() - t0)
+        steady_full, steady_red = min(t_full), min(t_red)
+        oracle = reduce_oracle(spec, fields, prog_idx, lane_idx, G)
+        match = all(np.array_equal(np.asarray(getattr(red, f)),
+                                   np.asarray(getattr(oracle, f)))
+                    for f in REDUCED_FIELDS)
+        bytes_full = B * 5 * 4
+        bytes_red = reduced_nbytes(G, spec)
+        row = dict(
+            B=B, G=G, H=H, D=D, K=spec.k_out, spec=spec_to_str(spec),
+            backend="xla", n_buckets=fn_red.buckets.n_buckets,
+            bytes_full_per_sweep=bytes_full,
+            bytes_reduced_per_sweep=bytes_red,
+            bytes_ratio=bytes_full / bytes_red,
+            steady_seconds_full=steady_full,
+            steady_seconds_reduced=steady_red,
+            steady_ratio=steady_full / steady_red,
+            reduced_matches_oracle=bool(match))
+        rows.append(row)
+        rep.add(path=f"reduction_{spec_to_str(spec).partition(':')[0]}",
+                B=B, seconds_per_batch=steady_red,
+                points_per_s=B / steady_red, steps_per_s=B / steady_red,
+                speedup_vs_single=row["steady_ratio"],
+                bytes_ratio=round(row["bytes_ratio"], 1))
+    return rows
+
+
 def _bench_mem_completion(rep: Report) -> dict:
     """Seed S x P double loop vs the vectorized greedy scheduler."""
     S, P = MEM_BENCH_STEPS, 16
@@ -385,6 +495,7 @@ def run() -> Report:
     rows: list = []
     _bench_backends(rep, rows)
     mk_rec = _bench_multi_kernel(rep)
+    red_rec = _bench_reduction(rep)
     mem_rec = _bench_mem_completion(rep)
     rec_rec = _bench_recovery(rep)
     payload = dict(
@@ -394,6 +505,7 @@ def run() -> Report:
         smoke=SMOKE,
         sweep=rows,
         multi_kernel=mk_rec,
+        reduction=red_rec,
         mem_completion=mem_rec,
         recovery=rec_rec,
     )

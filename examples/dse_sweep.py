@@ -9,6 +9,14 @@ devices exist) mesh-sharded with pjit.  On a 512-chip pod the same code
 sweeps ~10^6 design points per compile; here it runs on whatever
 jax.devices() shows.
 
+Analysis runs ON DEVICE: instead of shipping the full (B,) result
+arrays to the host and post-processing with argmin/reshape, the sweep
+carries a ``reduce=`` spec (``analysis.pareto``) and only the O(G*K)
+per-kernel candidate sets ever cross the device->host boundary -- a
+million-point sweep ships kilobytes.  Candidates are tagged with their
+flat grid index, so (kernel, hw, image) coordinates are recovered by
+divmod.
+
   PYTHONPATH=src python examples/dse_sweep.py
 """
 import time
@@ -16,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis.pareto import ParetoFront, TopK, reduced_nbytes
 from repro.apps import mibench
 from repro.core import dse
 from repro.core.characterization import default_profile
@@ -44,26 +53,51 @@ for mk in TOPOLOGIES.values():
 mems = np.stack([k.mem_init for k in kernels])
 
 G, H, D = len(programs), len(hws), len(mems)
+B = G * H * D
 mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+
+TOP_K = 3
+topk_spec = TopK("energy_pj", k=TOP_K)
+front_spec = ParetoFront(axes=("latency_cc", "energy_pj"), max_points=16)
+
 t0 = time.time()
-res = dse.sweep(programs=programs, profile=profile, hw_configs=hws,
-                mem_images=mems, mesh=mesh, max_steps=max_steps)
-lat = np.asarray(res.latency_cc).reshape(G, H, D)
-en = np.asarray(res.energy_pj).reshape(G, H, D)
-steps = np.asarray(res.steps_executed)
+topk = dse.sweep(programs=programs, profile=profile, hw_configs=hws,
+                 mem_images=mems, mesh=mesh, max_steps=max_steps,
+                 reduce=topk_spec)
+front = dse.sweep(programs=programs, profile=profile, hw_configs=hws,
+                  mem_images=mems, mesh=mesh, max_steps=max_steps,
+                  reduce=front_spec)
 dt = time.time() - t0
-print(f"swept {G} kernels x {H} hw configs x {D} images = {lat.size} "
-      f"design points in {dt:.1f}s on {len(jax.devices())} device(s) "
-      f"(ONE compiled executable)")
-print(f"true executed instructions: {steps.sum()} "
-      f"({steps.sum() / dt:.0f} steps/s; nominal budget was "
-      f"{lat.size * max_steps})")
+
+full_bytes = B * 5 * 4                      # five (B,) 4-byte fields
+red_bytes = reduced_nbytes(G, topk_spec) + reduced_nbytes(G, front_spec)
+print(f"swept {G} kernels x {H} hw configs x {D} images = {B} design "
+      f"points in {dt:.1f}s on {len(jax.devices())} device(s) "
+      f"(ONE compiled executable per spec)")
+print(f"device->host: {red_bytes} reduced bytes vs {full_bytes} for the "
+      f"full grid ({full_bytes / red_bytes:.0f}x less)")
+
+
+def coords(flat):
+    """flat grid index -> (hw config, image) within a kernel's rows."""
+    h, d = divmod(int(flat) % (H * D), D)
+    return h, d
+
 
 for g, k in enumerate(kernels):
-    lat_g = lat[g, :, g]                    # kernel g on its own image
-    en_g = en[g, :, g]
-    best = int(np.argmin(en_g))
-    print(f"\n[{k.name}] best-energy hw config: {hws[best]}")
-    print(f"  latency {lat_g[best]:.0f} cc, energy "
-          f"{en_g[best] / 1e3:.2f} nJ  (worst energy "
-          f"{en_g.max() / 1e3:.2f} nJ)")
+    print(f"\n[{k.name}] top-{TOP_K} by energy:")
+    for j in range(int(topk.count[g])):
+        h, d = coords(topk.indices[g, j])
+        print(f"  #{j + 1}: hw[{h}] image[{d}]  "
+              f"latency {topk.latency_cc[g, j]:.0f} cc, "
+              f"energy {topk.energy_pj[g, j] / 1e3:.2f} nJ  "
+              f"({hws[h]})")
+    n = int(front.count[g])
+    # exact duplicates (several design points with identical latency and
+    # energy) all sit on the front; print each distinct point once
+    seen = dict.fromkeys(
+        (f"({front.latency_cc[g, j]:.0f} cc, "
+         f"{front.energy_pj[g, j] / 1e3:.2f} nJ)")
+        for j in range(n))
+    print(f"  latency/energy Pareto front ({n} points, "
+          f"{len(seen)} distinct): {', '.join(seen)}")

@@ -1,0 +1,417 @@
+"""On-device top-k / Pareto-front reduction for sweep results.
+
+A pod-scale sweep produces ``(B,)`` latency/energy/power arrays with
+``B = G*H*D`` reaching millions of lanes, yet DSE consumers only ever look
+at the winners.  This module defines *reduction specs* — :class:`TopK`
+(best ``k`` lanes per program by one objective) and :class:`ParetoFront`
+(the non-dominated set per program over two objectives) — together with
+
+* a **jit-safe segmented device implementation** (fixed-size
+  ``lexsort`` + segmented scans keyed on the per-lane ``prog_idx``;
+  padded / foreign lanes are masked with ``+inf`` sentinels and a
+  ``lane_idx < 0`` validity convention) that runs inside the compiled
+  sweep so the ``(B,)`` grid never leaves the device,
+* a **numpy oracle** (independent O(n^2) reference) the device path is
+  bit-identical to, and
+* an **associative host-side merge** (:func:`merge_reduced`) so per-bucket,
+  per-device, and per-work-unit candidate sets — each only ``O(G*K)``
+  numbers — combine to exactly the monolithic answer.
+
+Every candidate is tagged with its *original flat grid index* so clients
+can recover ``(g, h, d)`` coordinates: ``g = idx // (H*D)``,
+``h = (idx // D) % H``, ``d = idx % D``.
+
+Exactness of the merge: top-k of a union of per-part top-k sets *is* the
+global top-k, always.  A union of per-part Pareto fronts re-filtered for
+dominance is the global front **provided no part overflowed
+``max_points``** — overflow is reported per segment via
+``ReducedResult.clipped`` (always 0 for :class:`TopK`).  Size
+``max_points`` above the largest per-program front you expect (see
+``docs/performance.md``).
+
+Objectives are compared as ``float32`` (matching on-device arithmetic);
+``edp`` is the energy-delay product ``energy_pj * latency_cc`` in float32.
+Ties are broken by ascending flat grid index, so results are deterministic
+and reproducible across backends, meshes and unit partitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Sequence, Tuple, Union
+
+import numpy as np
+
+# Mirrors ``repro.core.dse.SweepResult._fields`` (kept literal to avoid an
+# import cycle: core.dse imports this module for the ``reduce=`` API).
+RESULT_FIELDS: Tuple[str, ...] = (
+    "latency_cc", "energy_pj", "power_mw", "checksum", "steps_executed")
+
+#: Scalar objectives a reduction may rank by.  ``edp`` = energy-delay
+#: product (latency_cc * energy_pj, float32).
+OBJECTIVES: Tuple[str, ...] = (
+    "latency_cc", "energy_pj", "power_mw", "edp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Keep the ``k`` lanes with the smallest ``objective`` per program."""
+
+    objective: str = "energy_pj"
+    k: int = 8
+
+    def __post_init__(self):
+        if self.objective not in OBJECTIVES:
+            raise ValueError(
+                f"objective must be one of {OBJECTIVES}, got "
+                f"{self.objective!r}")
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+    @property
+    def k_out(self) -> int:
+        return self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoFront:
+    """Keep the non-dominated set per program over two objectives.
+
+    A lane ``p`` dominates ``q`` when ``p`` is <= on both axes and < on at
+    least one, so exact duplicates of a front point stay on the front.
+    The front is reported in ascending ``(axes[0], axes[1], index)`` order
+    and truncated to ``max_points`` (truncation is flagged in
+    ``ReducedResult.clipped`` — see the module docstring for what that
+    means for merge exactness).
+    """
+
+    axes: Tuple[str, str] = ("latency_cc", "energy_pj")
+    max_points: int = 32
+
+    def __post_init__(self):
+        axes = tuple(self.axes)
+        object.__setattr__(self, "axes", axes)
+        if len(axes) != 2 or len(set(axes)) != 2:
+            raise ValueError(f"axes must name 2 distinct objectives: {axes}")
+        for a in axes:
+            if a not in OBJECTIVES:
+                raise ValueError(
+                    f"axis must be one of {OBJECTIVES}, got {a!r}")
+        if self.max_points < 1:
+            raise ValueError(f"max_points must be >= 1, got {self.max_points}")
+
+    @property
+    def k_out(self) -> int:
+        return self.max_points
+
+
+Reduction = Union[TopK, ParetoFront]
+
+
+class ReducedResult(NamedTuple):
+    """Per-program candidate sets: ``O(G*K)`` numbers instead of ``O(B)``.
+
+    Row ``g`` holds up to ``K`` candidates for program ``g``; empty slots
+    have ``indices == -1`` (metric fields are zero there).  ``count[g]``
+    is the number of valid candidates; ``clipped[g]`` counts eligible
+    candidates dropped by the ``K`` cap (Pareto only — nonzero means a
+    later :func:`merge_reduced` is no longer guaranteed exact).
+    """
+
+    indices: np.ndarray         # (G, K) int32 flat grid index, -1 = empty
+    latency_cc: np.ndarray      # (G, K) int32
+    energy_pj: np.ndarray       # (G, K) float32
+    power_mw: np.ndarray        # (G, K) float32
+    checksum: np.ndarray        # (G, K) int32
+    steps_executed: np.ndarray  # (G, K) int32
+    count: np.ndarray           # (G,)   int32
+    clipped: np.ndarray         # (G,)   int32
+
+
+REDUCED_FIELDS: Tuple[str, ...] = ReducedResult._fields
+#: (G, K)-shaped members of ReducedResult (the per-candidate columns).
+CANDIDATE_FIELDS: Tuple[str, ...] = REDUCED_FIELDS[:6]
+
+_OUT_DTYPES = {
+    "indices": np.int32, "latency_cc": np.int32, "energy_pj": np.float32,
+    "power_mw": np.float32, "checksum": np.int32, "steps_executed": np.int32,
+    "count": np.int32, "clipped": np.int32,
+}
+
+
+def reduced_zeros(n_programs: int, spec: Reduction):
+    """Empty per-field arrays of a ``ReducedResult`` (checkpoint ``like``
+    templates, accumulators): candidates zeroed, ``indices`` all -1."""
+    K = spec.k_out
+    out = {f: np.zeros((n_programs, K) if f in CANDIDATE_FIELDS
+                       else (n_programs,), _OUT_DTYPES[f])
+           for f in REDUCED_FIELDS}
+    out["indices"][:] = -1
+    return out
+
+
+def reduced_nbytes(n_programs: int, spec: Reduction) -> int:
+    """Device->host bytes for one ReducedResult: O(G*K), independent of B."""
+    k = spec.k_out
+    return n_programs * (k * 4 * len(CANDIDATE_FIELDS) + 2 * 4)
+
+
+def spec_to_str(spec: Reduction) -> str:
+    """Compact, parseable form (CLI flags, checkpoint fingerprints)."""
+    if isinstance(spec, TopK):
+        return f"topk:{spec.objective}:{spec.k}"
+    return f"pareto:{','.join(spec.axes)}:{spec.max_points}"
+
+
+def spec_from_str(s: str) -> Reduction:
+    """Inverse of :func:`spec_to_str` (e.g. ``topk:edp:4``)."""
+    kind, _, rest = s.partition(":")
+    body, _, k = rest.rpartition(":")
+    if kind == "topk":
+        return TopK(objective=body, k=int(k))
+    if kind == "pareto":
+        return ParetoFront(axes=tuple(body.split(",")), max_points=int(k))
+    raise ValueError(f"unknown reduction spec {s!r}")
+
+
+def objective_values(name: str, fields):
+    """Objective as float32; works on numpy and jax arrays alike."""
+    lat, en, pw = fields[0], fields[1], fields[2]
+    if name == "latency_cc":
+        return lat.astype("float32")
+    if name == "energy_pj":
+        return en.astype("float32")
+    if name == "power_mw":
+        return pw.astype("float32")
+    if name == "edp":
+        return en.astype("float32") * lat.astype("float32")
+    raise ValueError(f"unknown objective {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracle
+# ---------------------------------------------------------------------------
+
+def reduce_oracle(spec: Reduction, fields, prog_idx, lane_idx,
+                  n_programs: int) -> ReducedResult:
+    """Reference reduction in plain numpy (independent of the device path).
+
+    ``fields`` are the five sweep-result arrays in :data:`RESULT_FIELDS`
+    order, each ``(B,)``; ``prog_idx`` maps each lane to its program
+    segment and ``lane_idx`` carries the original flat grid index
+    (``-1`` marks padded / invalid lanes, which are ignored).
+    """
+    arrs = [np.asarray(f) for f in fields]
+    prog = np.asarray(prog_idx).astype(np.int64)
+    lane = np.asarray(lane_idx).astype(np.int64)
+    G, K = int(n_programs), spec.k_out
+    out = {f: np.zeros((G, K), _OUT_DTYPES[f]) for f in CANDIDATE_FIELDS}
+    out["indices"][:] = -1
+    count = np.zeros((G,), np.int32)
+    clipped = np.zeros((G,), np.int32)
+    for g in range(G):
+        cand = np.nonzero((prog == g) & (lane >= 0))[0]
+        if cand.size == 0:
+            continue
+        if isinstance(spec, TopK):
+            key = objective_values(spec.objective, arrs)[cand]
+            eligible = cand[np.lexsort((lane[cand], key))]
+        else:
+            a = objective_values(spec.axes[0], arrs)[cand]
+            b = objective_values(spec.axes[1], arrs)[cand]
+            dom = ((a[None, :] <= a[:, None]) & (b[None, :] <= b[:, None])
+                   & ((a[None, :] < a[:, None]) | (b[None, :] < b[:, None]))
+                   ).any(axis=1)
+            front = np.nonzero(~dom)[0]
+            order = front[np.lexsort((lane[cand[front]], b[front], a[front]))]
+            eligible = cand[order]
+            clipped[g] = max(0, eligible.size - K)
+        chosen = eligible[:K]
+        count[g] = chosen.size
+        out["indices"][g, :chosen.size] = lane[chosen]
+        for i, f in enumerate(RESULT_FIELDS):
+            out[f][g, :chosen.size] = arrs[i][chosen].astype(_OUT_DTYPES[f])
+    return ReducedResult(count=count, clipped=clipped, **out)
+
+
+# ---------------------------------------------------------------------------
+# Host-side merge (associative)
+# ---------------------------------------------------------------------------
+
+def merge_reduced(spec: Reduction,
+                  parts: Sequence[ReducedResult]) -> ReducedResult:
+    """Merge candidate sets from buckets / devices / work units.
+
+    Associative and idempotent: candidates are pooled per segment,
+    deduplicated by flat grid index, and re-reduced with the numpy oracle
+    (each part is only ``(G, K)``, so this is cheap).  Exact for
+    :class:`TopK` always, and for :class:`ParetoFront` whenever no input
+    part was clipped; residual ``clipped`` counts are carried through so
+    callers can detect inexactness.
+    """
+    parts = [p for p in parts if p is not None]
+    if not parts:
+        raise ValueError("merge_reduced needs at least one part")
+    if len(parts) == 1:
+        return _as_numpy(parts[0])
+    G = int(np.asarray(parts[0].count).shape[0])
+    cat = {f: np.concatenate(
+        [np.asarray(getattr(p, f)) for p in parts], axis=1)
+        for f in CANDIDATE_FIELDS}
+    n = cat["indices"].shape[1]
+    lane = cat["indices"].astype(np.int64)
+    # Dedupe repeated lanes (e.g. a re-delivered partial): keep first.
+    for g in range(G):
+        seen = set()
+        for j in range(n):
+            ix = lane[g, j]
+            if ix < 0:
+                continue
+            if ix in seen:
+                lane[g, j] = -1
+            else:
+                seen.add(ix)
+    prog = np.repeat(np.arange(G), n)
+    fields = tuple(cat[f].reshape(-1) for f in RESULT_FIELDS)
+    red = reduce_oracle(spec, fields, prog, lane.reshape(-1), G)
+    carried = np.sum([np.asarray(p.clipped) for p in parts], axis=0)
+    return red._replace(
+        clipped=(red.clipped + carried).astype(np.int32))
+
+
+def remap_segments(part: ReducedResult, prog_map, index_offsets,
+                   n_programs: int) -> ReducedResult:
+    """Place a bucket-local result into the global segment space.
+
+    Row ``j`` of ``part`` becomes row ``prog_map[j]`` of a ``(G, K)``
+    result and its valid candidate indices are shifted by
+    ``index_offsets[j]`` (buckets enumerate lanes program-locally; the
+    offset restores the canonical ``(g*H + h)*D + d`` flat index).
+    """
+    rows = np.asarray(prog_map, dtype=np.int64)
+    offs = np.asarray(index_offsets, dtype=np.int64)
+    K = np.asarray(part.indices).shape[1]
+    out = {f: np.zeros((n_programs, K), _OUT_DTYPES[f])
+           for f in CANDIDATE_FIELDS}
+    out["indices"][:] = -1
+    count = np.zeros((n_programs,), np.int32)
+    clipped = np.zeros((n_programs,), np.int32)
+    src_idx = np.asarray(part.indices).astype(np.int64)
+    shifted = np.where(src_idx >= 0, src_idx + offs[:, None], -1)
+    out["indices"][rows] = shifted.astype(np.int32)
+    for f in RESULT_FIELDS:
+        out[f][rows] = np.asarray(getattr(part, f))
+    count[rows] = np.asarray(part.count)
+    clipped[rows] = np.asarray(part.clipped)
+    return ReducedResult(count=count, clipped=clipped, **out)
+
+
+def _as_numpy(r: ReducedResult) -> ReducedResult:
+    return ReducedResult(*(np.asarray(x) for x in r))
+
+
+# ---------------------------------------------------------------------------
+# Jit-safe segmented device implementation
+# ---------------------------------------------------------------------------
+
+def _seg_scan(seg, val, combine):
+    """Inclusive segmented scan of ``val`` over runs of equal ``seg``."""
+    import jax
+
+    def op(left, right):
+        sl, vl = left
+        sr, vr = right
+        import jax.numpy as jnp
+        return sr, jnp.where(sl == sr, combine(vl, vr), vr)
+
+    return jax.lax.associative_scan(op, (seg, val))[1]
+
+
+@functools.lru_cache(maxsize=None)
+def make_device_reducer(spec: Reduction, n_programs: int):
+    """Jitted ``(fields, prog_idx, lane_idx) -> ReducedResult`` reducer.
+
+    ``fields`` is the 5-tuple of device-resident ``(B,)`` sweep-result
+    arrays in :data:`RESULT_FIELDS` order.  Segments follow ``prog_idx``;
+    lanes with ``lane_idx < 0`` are masked (+inf sentinel keys) so padded
+    lanes from lane blocking, mesh padding, or unit padding never become
+    candidates.  Only ``O(G*K)`` values cross to the host.
+
+    Bit-identical to :func:`reduce_oracle`: both compare float32
+    objectives and break ties by ascending flat grid index.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    G, K = int(n_programs), spec.k_out
+    is_topk = isinstance(spec, TopK)
+
+    @jax.jit
+    def reduce_fn(fields, prog_idx, lane_idx):
+        lat, en, pw, ck, st = fields
+        B = prog_idx.shape[0]
+        lane32 = lane_idx.astype(jnp.int32)
+        valid = lane32 >= 0
+        seg = jnp.where(valid, prog_idx.astype(jnp.int32), G)
+        inf = jnp.float32(jnp.inf)
+        i = jnp.arange(B, dtype=jnp.int32)
+        if is_topk:
+            key = jnp.where(
+                valid, objective_values(spec.objective, fields), inf)
+            order = jnp.lexsort((lane32, key, seg)).astype(jnp.int32)
+            sseg = seg[order]
+            eligible = valid[order]
+        else:
+            a = jnp.where(valid, objective_values(spec.axes[0], fields), inf)
+            b = jnp.where(valid, objective_values(spec.axes[1], fields), inf)
+            order = jnp.lexsort((lane32, b, a, seg)).astype(jnp.int32)
+            sseg, sa, sb = seg[order], a[order], b[order]
+            prev_same_seg = jnp.concatenate(
+                [jnp.zeros((1,), bool), sseg[1:] == sseg[:-1]])
+            # min b among earlier same-segment lanes (exclusive scan)
+            incl = _seg_scan(sseg, sb, jnp.minimum)
+            excl = jnp.where(
+                prev_same_seg,
+                jnp.concatenate([jnp.full((1,), inf), incl[:-1]]), inf)
+            # first index of this (segment, a) run
+            run_change = ~(prev_same_seg & jnp.concatenate(
+                [jnp.zeros((1,), bool), sa[1:] == sa[:-1]]))
+            run_start = jax.lax.cummax(jnp.where(run_change, i, 0))
+            # dominated <=> a strictly-smaller-a lane has b <= mine, or the
+            # min-b lane of my own a-run has b strictly below mine
+            dominated = (excl[run_start] <= sb) | (sb[run_start] < sb)
+            eligible = valid[order] & ~dominated
+        e32 = eligible.astype(jnp.int32)
+        rank = _seg_scan(sseg, e32, jnp.add) - e32
+        take = eligible & (rank < K)
+        slot = jnp.where(take, sseg * K + rank, G * K)
+        out_src = jnp.full((G * K,), B, jnp.int32).at[slot].set(
+            order, mode="drop").reshape(G, K)
+        ok = out_src < B
+        safe = jnp.clip(out_src, 0, B - 1)
+
+        def gather(x, dtype, fill):
+            return jnp.where(ok, x[safe].astype(dtype),
+                             jnp.asarray(fill, dtype))
+
+        tot = jnp.zeros((G + 1,), jnp.int32).at[sseg].add(e32)[:G]
+        count = jnp.minimum(tot, K)
+        clipped = (jnp.zeros((G,), jnp.int32) if is_topk
+                   else jnp.maximum(tot - K, 0))
+        return ReducedResult(
+            indices=gather(lane32, jnp.int32, -1),
+            latency_cc=gather(lat, jnp.int32, 0),
+            energy_pj=gather(en, jnp.float32, 0.0),
+            power_mw=gather(pw, jnp.float32, 0.0),
+            checksum=gather(ck, jnp.int32, 0),
+            steps_executed=gather(st, jnp.int32, 0),
+            count=count, clipped=clipped)
+
+    return reduce_fn
+
+
+def reduce_on_device(spec: Reduction, result_fields, prog_idx, lane_idx,
+                     n_programs: int) -> ReducedResult:
+    """Convenience wrapper around :func:`make_device_reducer`."""
+    fn = make_device_reducer(spec, int(n_programs))
+    return fn(tuple(result_fields), prog_idx, lane_idx)

@@ -85,12 +85,15 @@ class TunedConfig:
     """A resolved knob set.  ``source`` records where it came from:
     ``"default"`` (static fallbacks), ``"cache"`` (persisted winner),
     ``"tuned"`` (just timed), ``"explicit"`` (caller pinned every
-    knob)."""
+    knob).  ``backend`` is set only on backend-*choice* entries (shape
+    classes keyed with ``backend=AUTO``): the engine that won the
+    xla-vs-pallas timing for that shape."""
     blk_b: int
     chunk_steps: Optional[int]
     max_buckets: int
     source: str = "default"
     points_per_s: Optional[float] = None
+    backend: Optional[str] = None
 
 
 def _valid_entry(e) -> bool:
@@ -110,6 +113,9 @@ def _valid_entry(e) -> bool:
         return False
     pps = e.get("points_per_s")
     if pps is not None and not isinstance(pps, (int, float)):
+        return False
+    be = e.get("backend")
+    if be is not None and be not in ("xla", "pallas"):
         return False
     return True
 
@@ -169,7 +175,8 @@ class AutotuneCache:
             return None
         return TunedConfig(blk_b=e["blk_b"], chunk_steps=e["chunk_steps"],
                            max_buckets=e["max_buckets"], source="cache",
-                           points_per_s=e.get("points_per_s"))
+                           points_per_s=e.get("points_per_s"),
+                           backend=e.get("backend"))
 
     def store(self, shape: ShapeClass, cfg: TunedConfig) -> None:
         self.entries[shape.key] = {
@@ -178,6 +185,7 @@ class AutotuneCache:
                             else int(cfg.chunk_steps)),
             "max_buckets": int(cfg.max_buckets),
             "points_per_s": cfg.points_per_s,
+            "backend": cfg.backend,
             "shape": dataclasses.asdict(shape),
         }
         self.save()
@@ -228,6 +236,25 @@ def default_cache() -> AutotuneCache:
     return c
 
 
+def resolve_backend(shape: ShapeClass, *,
+                    cache: Optional[AutotuneCache] = None,
+                    default: str = "xla") -> str:
+    """Resolve a ``backend=AUTO`` request for a shape class.
+
+    ``shape`` must be keyed with ``backend=AUTO`` (backend-choice
+    entries live in the same cache, under the AUTO-keyed shape).
+    Precedence is decided at the call sites: an explicit backend never
+    reaches here; a cached xla-vs-pallas winner is used when present;
+    otherwise ``default``.  Timing new shapes is ``tune_sweep``'s job --
+    this helper never compiles anything, so the resumable runner and
+    the service can resolve AUTO without perturbing campaign wall time.
+    """
+    cfg = (cache or default_cache()).lookup(shape)
+    if cfg is not None and cfg.backend in ("xla", "pallas"):
+        return cfg.backend
+    return default
+
+
 def default_candidates(shape: ShapeClass, max_steps: int) -> List[dict]:
     """The small first-encounter candidate grid: bucket counts that make
     sense for G, early-exit chunk sizes around the default, and (Pallas
@@ -252,6 +279,15 @@ def tune_sweep(programs, profile, hw_configs, mem_images, *,
     (min taken -- noise-robust for short sweeps).  The winner lands in
     the cache keyed by the sweep's shape class, so every later
     ``dse.sweep``/service call of that shape picks it up for free.
+
+    ``backend=AUTO`` makes the *backend itself* a tuned knob: both
+    engines (xla scan vs pallas) are timed over their candidate grids;
+    each engine's winner is persisted under its concrete-backend shape
+    key, and the overall winner lands under the AUTO-keyed shape with
+    ``TunedConfig.backend`` set -- later ``backend=AUTO`` calls of that
+    shape (``dse.sweep``, the service, the resumable runner) resolve
+    through ``resolve_backend`` without re-timing.
+
     Import of dse is deferred (dse imports this module)."""
     import jax
 
@@ -262,32 +298,46 @@ def tune_sweep(programs, profile, hw_configs, mem_images, *,
     G = batch.n_programs
     H, D = len(hw_configs), int(mem_images.shape[0])
     n_devices = int(mesh.devices.size) if mesh is not None else 1
-    shape = ShapeClass(G=G, t_max=batch.t_max, H=H, D=D, backend=backend,
-                       n_devices=n_devices)
-    cands = list(candidates) if candidates is not None \
-        else default_candidates(shape, max_steps)
+    backends = ("xla", "pallas") if is_auto(backend) else (backend,)
     B = G * H * D
-    best = None
-    for cand in cands:
-        def run():
-            jax.block_until_ready(dse.sweep(
-                program=batch, profile=profile, hw_configs=hw_configs,
-                mem_images=mem_images, mesh=mesh, max_steps=max_steps,
-                mem_size=mem_size, backend=backend, interpret=interpret,
-                chunk_steps=cand["chunk_steps"], blk_b=cand["blk_b"],
-                max_buckets=cand["max_buckets"], autotune=False))
-        run()                                 # compile + warm
-        ts = []
-        for _ in range(max(1, repeats)):
-            t0 = time.perf_counter()
-            run()
-            ts.append(time.perf_counter() - t0)
-        pps = B / max(min(ts), 1e-9)
+    store = cache or default_cache()
+    best = None                               # (pps, cand, concrete backend)
+    for be in backends:
+        shape_b = ShapeClass(G=G, t_max=batch.t_max, H=H, D=D, backend=be,
+                             n_devices=n_devices)
+        cands = list(candidates) if candidates is not None \
+            else default_candidates(shape_b, max_steps)
+        best_b = None
+        for cand in cands:
+            def run():
+                jax.block_until_ready(dse.sweep(
+                    program=batch, profile=profile, hw_configs=hw_configs,
+                    mem_images=mem_images, mesh=mesh, max_steps=max_steps,
+                    mem_size=mem_size, backend=be, interpret=interpret,
+                    chunk_steps=cand["chunk_steps"], blk_b=cand["blk_b"],
+                    max_buckets=cand["max_buckets"], autotune=False))
+            run()                             # compile + warm
+            ts = []
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                run()
+                ts.append(time.perf_counter() - t0)
+            pps = B / max(min(ts), 1e-9)
+            if best_b is None or pps > best_b[0]:
+                best_b = (pps, cand)
+        pps, cand = best_b
+        store.store(shape_b, TunedConfig(
+            blk_b=cand["blk_b"], chunk_steps=cand["chunk_steps"],
+            max_buckets=cand["max_buckets"], source="tuned",
+            points_per_s=pps))
         if best is None or pps > best[0]:
-            best = (pps, cand)
-    pps, cand = best
+            best = (pps, cand, be)
+    pps, cand, be = best
     cfg = TunedConfig(blk_b=cand["blk_b"], chunk_steps=cand["chunk_steps"],
                       max_buckets=cand["max_buckets"], source="tuned",
-                      points_per_s=pps)
-    (cache or default_cache()).store(shape, cfg)
+                      points_per_s=pps,
+                      backend=be if is_auto(backend) else None)
+    if is_auto(backend):
+        store.store(ShapeClass(G=G, t_max=batch.t_max, H=H, D=D,
+                               backend=AUTO, n_devices=n_devices), cfg)
     return cfg

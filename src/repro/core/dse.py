@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import isa
+from ..analysis import pareto as _pareto
 from .autotune import AUTO, ShapeClass, autotune_enabled, default_cache, \
     is_auto, tune_sweep
 from .cgra import init_state, make_exec_fn, rows_from_fused
@@ -249,7 +250,8 @@ def make_sweep_fn(program: Union[Program, ProgramBatch, Sequence[Program]],
                   backend: str = "xla", chunk_steps: Optional[int] = 64,
                   blk_b: int = 32, interpret: Optional[bool] = None,
                   max_banks: Optional[int] = None,
-                  validate: bool = True):
+                  validate: bool = True,
+                  reduce: Optional[_pareto.Reduction] = None):
     """Build the fused sweep function where the case-(vi) estimate is
     fused into the simulation scan (single pass, no trace
     materialization -- O(1) memory per design point).
@@ -294,15 +296,29 @@ def make_sweep_fn(program: Union[Program, ProgramBatch, Sequence[Program]],
     aliasing.  ``sweep()`` derives the bound from its configs (and passes
     ``validate=False``, since its configs are pre-checked by
     construction), so prefer it for exotic topologies.
+
+    reduce: an ``analysis.pareto`` reduction spec (``TopK`` /
+    ``ParetoFront``).  Batch API only; the signature becomes
+    ``fn(mem_init, hw, prog_idx, lane_idx) -> ReducedResult`` and the
+    per-program segmented reduction runs on device (fused into the
+    Pallas engine's compiled program; composed with the cached jitted
+    reducer on the XLA path), so only ``O(G*K)`` candidate values ever
+    reach the host.  ``lane_idx`` carries each lane's original flat grid
+    index; ``-1`` marks padded lanes, which are masked with +inf
+    sentinels and can never become candidates.
     """
     if max_banks is None:
         max_banks = DEFAULT_MAX_BANKS
+    if reduce is not None and isinstance(program, Program):
+        raise ValueError("reduce= needs the batch API; pass a sequence "
+                         "of programs or a ProgramBatch")
     if backend == "pallas":
         from ..kernels.cgra_sweep.ops import make_pallas_sweep_fn
         return make_pallas_sweep_fn(
             program, profile, rows=rows, cols=cols, mem_size=mem_size,
             max_steps=max_steps, chunk_steps=chunk_steps, blk_b=blk_b,
-            interpret=interpret, max_banks=max_banks, validate=validate)
+            interpret=interpret, max_banks=max_banks, validate=validate,
+            reduce=reduce)
     if backend != "xla":
         raise ValueError(f"unknown sweep backend: {backend!r}")
 
@@ -366,6 +382,21 @@ def make_sweep_fn(program: Union[Program, ProgramBatch, Sequence[Program]],
                                *parts)
             return jax.tree.map(lambda x: x[:B], out)
 
+    if reduce is not None:
+        # Compose the cached jitted segmented reducer over the core's
+        # device-resident output: the (B,) arrays flow device-to-device
+        # into the reduction and only the (G, K) candidate set is ever
+        # fetched by callers.
+        red = _pareto.make_device_reducer(reduce, batch.n_programs)
+        base = fn
+
+        def rfn(mem_init, hw: HwConfig, prog_idx, lane_idx):
+            res = base(mem_init, hw, prog_idx)
+            return red(tuple(res), jnp.asarray(prog_idx, jnp.int32),
+                       jnp.asarray(lane_idx, jnp.int32))
+
+        return rfn
+
     return fn
 
 
@@ -416,11 +447,45 @@ def plan_grid(program: Union[Program, ProgramBatch, Sequence[Program], None]
     return GridPlan(batch, images, img_idx, prog_idx, hw_grid, max_banks)
 
 
+def _reduced_shard_call(fn, images, mesh, spec, n_devices: int):
+    """SPMD reduced sweep: every device sweeps its shard of the flat grid
+    and reduces it on device to a ``(G, K)`` candidate set; only the
+    gathered ``n_devices * G * K`` candidates cross to the host, where the
+    associative ``merge_reduced`` recovers exactly the monolithic answer.
+    Works for both backends (the XLA scan core and the Pallas engine are
+    both shard_map-able); padded lanes carry ``lane_idx = -1``."""
+    from jax.sharding import PartitionSpec
+
+    from ..parallel.sharding import flat_batch_spec
+    flat = flat_batch_spec(mesh)
+
+    def shard_fn(imgs, idx, gi, lane, hw):
+        red = fn(jnp.take(imgs, idx, axis=0), hw, gi, lane)
+        return jax.tree.map(lambda x: x[None], red)
+
+    sharded = jax.jit(_shard_map(
+        shard_fn, mesh,
+        in_specs=(PartitionSpec(), flat, flat, flat, flat),
+        out_specs=flat))
+
+    def call(idx, gi, lane, hw) -> _pareto.ReducedResult:
+        out = sharded(images, jnp.asarray(idx, jnp.int32),
+                      jnp.asarray(gi, jnp.int32),
+                      jnp.asarray(lane, jnp.int32), hw)
+        stacked = [np.asarray(leaf) for leaf in out]
+        parts = [_pareto.ReducedResult(*(leaf[i] for leaf in stacked))
+                 for i in range(n_devices)]
+        return _pareto.merge_reduced(spec, parts)
+
+    return call
+
+
 def make_grid_fn(plan: GridPlan, profile: Profile, *,
                  max_steps: int = 2048, mem_size: int = 4096,
                  backend: str = "xla", chunk_steps: Optional[int] = 64,
                  blk_b: int = 32, interpret: Optional[bool] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 reduce: Optional[_pareto.Reduction] = None):
     """Unit-sliceable sweep core: ``fn(img_idx, hw_slice, prog_idx) ->
     SweepResult`` for ANY contiguous (or gathered) slice of the planned
     grid.  The underlying executable is the lru-cached operand core, so
@@ -432,17 +497,40 @@ def make_grid_fn(plan: GridPlan, profile: Profile, *,
     With ``mesh`` the slice runs SPMD over its devices (shard_map for
     the Pallas engine, pjit for XLA, as in ``sweep``); slice lengths
     must then divide the device count -- the sweep runner pads its
-    units accordingly."""
+    units accordingly.
+
+    With ``reduce`` the signature gains a trailing ``lane_idx`` row
+    (original flat grid index per lane, -1 for padded lanes) and the fn
+    returns the unit's ``ReducedResult`` -- per-program candidates
+    reduced on device (per shard on a mesh, merged from the gathered
+    ``n_devices*K`` candidates on host), so a checkpointable work unit
+    ships O(G*K) bytes instead of its lane count."""
     fn = make_sweep_fn(plan.batch, profile, max_steps=max_steps,
                        mem_size=mem_size, backend=backend,
                        chunk_steps=chunk_steps, blk_b=blk_b,
                        interpret=interpret, max_banks=plan.max_banks,
-                       validate=False)
+                       validate=False, reduce=reduce)
     images = plan.images
     if mesh is None:
+        if reduce is not None:
+            def grid_fn(idx, hw, gi, lane):
+                return fn(jnp.take(images, jnp.asarray(idx, jnp.int32),
+                                   axis=0),
+                          hw, jnp.asarray(gi, jnp.int32),
+                          jnp.asarray(lane, jnp.int32))
+            return grid_fn
+
         def grid_fn(idx, hw, gi):
             return fn(jnp.take(images, jnp.asarray(idx, jnp.int32), axis=0),
                       hw, jnp.asarray(gi, jnp.int32))
+        return grid_fn
+
+    if reduce is not None:
+        call = _reduced_shard_call(fn, images, mesh, reduce,
+                                   int(mesh.devices.size))
+
+        def grid_fn(idx, hw, gi, lane):
+            return call(idx, gi, lane, hw)
         return grid_fn
 
     from ..parallel.sharding import (batch_sharding, flat_batch_spec,
@@ -491,7 +579,10 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
           blk_b: Union[int, str] = AUTO,
           max_buckets: Union[int, str] = AUTO,
           autotune: Optional[bool] = None,
-          interpret: Optional[bool] = None) -> SweepResult:
+          interpret: Optional[bool] = None,
+          reduce: Optional[_pareto.Reduction] = None,
+          observed_steps: Optional[Sequence[int]] = None
+          ) -> Union[SweepResult, _pareto.ReducedResult]:
     """Run the full (program x hw x data) grid through the lru-cached
     operand core(s), optionally sharded over every device of a mesh.
 
@@ -520,7 +611,11 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     knobs (``chunk_steps=None`` still means "disable chunking").  With
     ``autotune=True`` (or ``REPRO_AUTOTUNE=1``) an untuned multi-program
     shape is timed across a small candidate grid first and the winner is
-    persisted for every later call of that shape.
+    persisted for every later call of that shape.  ``backend=AUTO``
+    makes the engine choice itself a tuned knob: an explicit backend
+    always wins, a cached xla-vs-pallas winner for this shape class is
+    used next, and with tuning opted in an unseen shape times both
+    engines once (``tune_sweep(backend=AUTO)``); otherwise ``"xla"``.
 
     max_buckets > 1 splits a multi-kernel sweep into up to that many
     length buckets (``program.bucket_programs``): each bucket packs to
@@ -540,16 +635,50 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     The bank-scoreboard bound of the contention model is derived here from
     the configs (padded to a power of two); configs beyond the hard
     ceiling fail with an assertion instead of silently aliasing.
+
+    reduce: an ``analysis.pareto`` spec (``TopK(objective, k)`` /
+    ``ParetoFront(axes, max_points)``).  The per-program reduction runs
+    on device inside the compiled sweep -- per bucket when bucketed, per
+    device on a mesh -- and only the ``O(G*K)`` candidate sets are
+    merged on the host (``merge_reduced``), so the ``(B,)`` grid never
+    leaves the device.  Returns a host-resident ``ReducedResult`` whose
+    candidates are tagged with their canonical flat grid index
+    ``(g*H + h)*D + d``; results are bit-identical to reducing the
+    unreduced sweep with the numpy oracle, for any bucketing, mesh, or
+    backend.
+
+    observed_steps: optional per-program observed ``steps_executed``
+    maxima from a prior run; when given, length bucketing groups by
+    *trip count* instead of static program length
+    (``program.bucket_programs(observed_steps=...)``), which separates
+    kernels whose runtimes diverge from their instruction counts.
     """
     plan = plan_grid(program, hw_configs, mem_images, programs=programs)
     batch = plan.batch
     G = batch.n_programs
     H, D = len(hw_configs), mem_images.shape[0]
+    n_dev = int(mesh.devices.size) if mesh is not None else 1
+
+    cache = default_cache()
+    if is_auto(backend):
+        # backend itself is a tuned knob: explicit > cached winner >
+        # (with tuning opted in) time xla-vs-pallas now > default xla
+        auto_shape = ShapeClass(G=G, t_max=batch.t_max, H=H, D=D,
+                                backend=AUTO, n_devices=n_dev)
+        cached_b = cache.lookup(auto_shape)
+        if cached_b is not None and cached_b.backend in ("xla", "pallas"):
+            backend = cached_b.backend
+        elif autotune_enabled(autotune) and G > 1:
+            cfg_b = tune_sweep(batch, profile, hw_configs, mem_images,
+                               backend=AUTO, max_steps=max_steps,
+                               mem_size=mem_size, mesh=mesh,
+                               interpret=interpret, cache=cache)
+            backend = cfg_b.backend or "xla"
+        else:
+            backend = "xla"
 
     shape = ShapeClass(G=G, t_max=batch.t_max, H=H, D=D, backend=backend,
-                       n_devices=int(mesh.devices.size) if mesh is not None
-                       else 1)
-    cache = default_cache()
+                       n_devices=n_dev)
     cfg = cache.resolve(shape, blk_b=blk_b, chunk_steps=chunk_steps,
                         max_buckets=max_buckets)
     if (autotune_enabled(autotune) and cfg.source == "default" and G > 1
@@ -563,7 +692,8 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
 
     if G > 1 and cfg.max_buckets > 1:
         buckets = bucket_programs([batch.program(g) for g in range(G)],
-                                  cfg.max_buckets)
+                                  cfg.max_buckets,
+                                  observed_steps=observed_steps)
         if buckets.n_buckets > 1:
             block = H * D
             # Forward the caller's original chunk/blk knobs (AUTO or
@@ -576,8 +706,23 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
                       mem_images=mem_images, mesh=mesh, max_steps=max_steps,
                       mem_size=mem_size, backend=backend,
                       chunk_steps=chunk_steps, blk_b=blk_b,
-                      max_buckets=1, autotune=False, interpret=interpret)
+                      max_buckets=1, autotune=False, interpret=interpret,
+                      reduce=reduce)
                 for b in buckets.batches]
+
+            if reduce is not None:
+                # Each bucket reduced itself on device; lift its rows
+                # into the global segment space (bucket-local program j
+                # maps to canonical program g, shifting candidate flat
+                # indices by the row-block offset) and merge the K-sized
+                # candidate sets -- never B-sized grids -- on the host.
+                placed = [
+                    _pareto.remap_segments(
+                        part, buckets.groups[bi],
+                        [(g - j) * block
+                         for j, g in enumerate(buckets.groups[bi])], G)
+                    for bi, part in enumerate(parts)]
+                return _pareto.merge_reduced(reduce, placed)
 
             def scatter(*leaves):
                 out = None
@@ -605,18 +750,26 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     # The constant-closure fast path is reserved for callers that hand us
     # a bare Program (the legacy single-kernel API).  A 1-element batch
     # or list goes through the operand core instead, so single-program
-    # buckets of a bucketed sweep share the cached executables.
-    single_const = programs is None and isinstance(program, Program)
+    # buckets of a bucketed sweep share the cached executables.  A
+    # reduced sweep always uses the operand core (the reducer keys its
+    # segments on the prog_idx operand).
+    single_const = (programs is None and isinstance(program, Program)
+                    and reduce is None)
     if single_const:
         fn1 = make_sweep_fn(program, profile, **kw)
         fn = lambda mem, hw, gi: fn1(mem, hw)
     else:
-        fn = make_sweep_fn(batch, profile, **kw)
+        fn = make_sweep_fn(batch, profile, **kw, reduce=reduce)
 
     def grid_fn(idx, hw, gi):
         return fn(jnp.take(images, idx, axis=0), hw, gi)
 
     if mesh is None:
+        if reduce is not None:
+            lane_idx = jnp.arange(G * H * D, dtype=jnp.int32)
+            red = fn(jnp.take(images, img_idx, axis=0), hw_grid, prog_idx,
+                     lane_idx)
+            return _pareto.merge_reduced(reduce, [red])
         if single_const:
             # legacy data flow: the constant-closure vfn is unjitted by
             # design (tables fold into the executable); jit the wrapper
@@ -636,6 +789,15 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     img_idx = pad_batch(img_idx, Bp)
     prog_idx = pad_batch(prog_idx, Bp)
     hw_grid = jax.tree.map(lambda x: pad_batch(x, Bp), hw_grid)
+
+    if reduce is not None:
+        # SPMD reduce: every device reduces its shard on device and only
+        # the gathered n_devices*K candidate rows reach the host merge.
+        # The duplicate pad lanes are masked via lane_idx = -1.
+        lane_idx = pad_batch(jnp.arange(B, dtype=jnp.int32), Bp, fill=-1)
+        call = _reduced_shard_call(fn, images, mesh, reduce,
+                                   int(mesh.devices.size))
+        return call(img_idx, prog_idx, lane_idx, hw_grid)
 
     if backend == "pallas":
         # pallas_call does not partition under pjit/GSPMD; run the engine
@@ -677,7 +839,9 @@ def make_bucketed_sweep_fn(programs, profile: Profile,
                            chunk_steps: Union[int, None, str] = AUTO,
                            blk_b: Union[int, str] = AUTO,
                            max_buckets: Union[int, str] = AUTO,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           reduce: Optional[_pareto.Reduction] = None,
+                           observed_steps: Optional[Sequence[int]] = None):
     """Hold a bucketed packed plan: ``fn() -> SweepResult``.
 
     ``sweep()`` re-packs, re-buckets, and re-resolves knobs on every
@@ -693,7 +857,14 @@ def make_bucketed_sweep_fn(programs, profile: Profile,
     (``ProgramBuckets``), ``fn.bucket_fns`` (list of ``(sweep_fn, mems,
     hw, prog_idx)`` operand tuples), ``fn.bucket_cfgs`` (per-bucket
     ``TunedConfig``).  Unsharded only (a mesh shards *within* one
-    ``sweep`` call; hold one plan per mesh instead)."""
+    ``sweep`` call; hold one plan per mesh instead).
+
+    With ``reduce`` each bucket reduces itself on device (the lane
+    operands carry *canonical* flat grid indices, precomputed here once)
+    and ``fn() -> ReducedResult`` merges the K-sized per-bucket
+    candidate sets on the host -- the steady-state loop never touches a
+    ``(B,)`` array.  ``observed_steps`` buckets by trip count instead of
+    static length (see ``program.bucket_programs``)."""
     batch = as_program_batch(programs)
     G = batch.n_programs
     H, D = len(hw_configs), int(mem_images.shape[0])
@@ -702,10 +873,11 @@ def make_bucketed_sweep_fn(programs, profile: Profile,
         ShapeClass(G=G, t_max=batch.t_max, H=H, D=D, backend=backend),
         blk_b=blk_b, chunk_steps=chunk_steps, max_buckets=max_buckets)
     buckets = bucket_programs([batch.program(g) for g in range(G)],
-                              top.max_buckets if G > 1 else 1)
+                              top.max_buckets if G > 1 else 1,
+                              observed_steps=observed_steps)
     block = H * D
-    bucket_fns, bucket_cfgs = [], []
-    for b in buckets.batches:
+    bucket_fns, bucket_cfgs, bucket_lanes = [], [], []
+    for bi, b in enumerate(buckets.batches):
         plan = plan_grid(b, hw_configs, mem_images)
         cfgb = cache.resolve(
             ShapeClass(G=b.n_programs, t_max=b.t_max, H=H, D=D,
@@ -715,29 +887,45 @@ def make_bucketed_sweep_fn(programs, profile: Profile,
                             max_steps=max_steps, backend=backend,
                             chunk_steps=cfgb.chunk_steps, blk_b=cfgb.blk_b,
                             interpret=interpret, max_banks=plan.max_banks,
-                            validate=False)
+                            validate=False, reduce=reduce)
         mems = jnp.take(plan.images, jnp.asarray(plan.img_idx), axis=0)
         bucket_fns.append((fnb, mems, plan.hw_grid,
                            jnp.asarray(plan.prog_idx)))
         bucket_cfgs.append(cfgb)
+        if reduce is not None:
+            # canonical flat indices of this bucket's lanes, so bucket
+            # candidates come back already tagged in global coordinates
+            bucket_lanes.append(jnp.asarray(np.concatenate(
+                [np.arange(g * block, (g + 1) * block, dtype=np.int32)
+                 for g in buckets.groups[bi]])))
 
-    def fn() -> SweepResult:
-        parts = [f(m, h, gi) for f, m, h, gi in bucket_fns]
+    if reduce is not None:
+        def fn() -> _pareto.ReducedResult:
+            placed = [
+                _pareto.remap_segments(
+                    f(m, h, gi, bucket_lanes[bi]), buckets.groups[bi],
+                    np.zeros(len(buckets.groups[bi]), np.int64), G)
+                for bi, (f, m, h, gi) in enumerate(bucket_fns)]
+            return _pareto.merge_reduced(reduce, placed)
+    else:
+        def fn() -> SweepResult:
+            parts = [f(m, h, gi) for f, m, h, gi in bucket_fns]
 
-        def scatter(*leaves):
-            out = None
-            for bi, leaf in enumerate(leaves):
-                a = np.asarray(leaf)
-                if out is None:
-                    out = np.empty((G * block,) + a.shape[1:], a.dtype)
-                for j, g in enumerate(buckets.groups[bi]):
-                    out[g * block:(g + 1) * block] = \
-                        a[j * block:(j + 1) * block]
-            return jnp.asarray(out)
+            def scatter(*leaves):
+                out = None
+                for bi, leaf in enumerate(leaves):
+                    a = np.asarray(leaf)
+                    if out is None:
+                        out = np.empty((G * block,) + a.shape[1:], a.dtype)
+                    for j, g in enumerate(buckets.groups[bi]):
+                        out[g * block:(g + 1) * block] = \
+                            a[j * block:(j + 1) * block]
+                return jnp.asarray(out)
 
-        return jax.tree.map(scatter, *parts)
+            return jax.tree.map(scatter, *parts)
 
     fn.buckets = buckets
     fn.bucket_fns = bucket_fns
     fn.bucket_cfgs = bucket_cfgs
+    fn.reduce = reduce
     return fn

@@ -331,20 +331,38 @@ def bucket_boundaries(lengths: Sequence[int],
 
 
 def bucket_programs(programs: Sequence[Program],
-                    max_buckets: int) -> ProgramBuckets:
+                    max_buckets: int,
+                    observed_steps: Optional[Sequence[int]] = None
+                    ) -> ProgramBuckets:
     """Group kernels by padded length into at most ``max_buckets`` packed
     batches, so short kernels stop paying the longest kernel's ``T_max``
     (and its convoy: a packed sweep runs every lane until the slowest
     kernel exits).  The partition minimizes total padded instruction
     slots; equal-length programs always share a bucket.  Scheduling one
     packed batch per bucket through the lru-cached sweep cores grows
-    ``dse.TRACE_COUNTS`` by at most ``n_buckets``, never G."""
+    ``dse.TRACE_COUNTS`` by at most ``n_buckets``, never G.
+
+    observed_steps: per-program observed ``steps_executed`` maxima from a
+    prior run (or the sweep service's per-kernel history).  Static length
+    is only a proxy for convoy cost -- a tight data-dependent loop makes
+    a short kernel run long -- so when trip counts are known the DP
+    partitions by them instead: kernels that *run* similarly long share
+    a bucket, regardless of instruction count.  Packing within each
+    bucket is unchanged (still padded to the bucket's ``T_max``)."""
     progs = list(programs)
     if not progs:
         raise ValueError("bucket_programs: empty program sequence")
     if max_buckets < 1:
         raise ValueError(f"bucket_programs: max_buckets={max_buckets} < 1")
-    groups = bucket_boundaries([p.n_instrs for p in progs], max_buckets)
+    if observed_steps is not None:
+        if len(observed_steps) != len(progs):
+            raise ValueError(
+                f"bucket_programs: observed_steps has {len(observed_steps)} "
+                f"entries for {len(progs)} programs")
+        keys = [int(s) for s in observed_steps]
+    else:
+        keys = [p.n_instrs for p in progs]
+    groups = bucket_boundaries(keys, max_buckets)
     batches = tuple(pack_programs([progs[i] for i in g]) for g in groups)
     assignment = np.empty(len(progs), np.int32)
     for b, g in enumerate(groups):

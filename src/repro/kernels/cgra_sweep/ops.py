@@ -144,6 +144,27 @@ def _pallas_sweep_core(rows: int, cols: int, mem_size: int, t_max: int,
     return _fn
 
 
+@functools.lru_cache(maxsize=None)
+def _reduced_core(core, spec, n_progs: int):
+    """Fuse the segmented top-k / Pareto reducer into the sweep core.
+
+    One jitted program per (core, reduction spec): the ``(B,)`` result
+    arrays are consumed on device by ``analysis.pareto``'s segmented
+    sort/scan reduction, so only the ``O(G*K)`` candidate set is ever
+    materialized for the host.  Lanes with ``lane_idx < 0`` (padding)
+    are masked with +inf sentinels inside the reducer."""
+    from ...analysis.pareto import make_device_reducer
+    red = make_device_reducer(spec, n_progs)
+
+    @jax.jit
+    def _rfn(tab, plen, prof, mem_init, hw: HwConfig, prog_idx, lane_idx):
+        res = core(tab, plen, prof, mem_init, hw, prog_idx)
+        return red(tuple(res), jnp.asarray(prog_idx, jnp.int32),
+                   jnp.asarray(lane_idx, jnp.int32))
+
+    return _rfn
+
+
 def make_pallas_sweep_fn(program, profile: Profile, *,
                          rows: int = 4, cols: int = 4, mem_size: int = 4096,
                          max_steps: int = 2048,
@@ -151,11 +172,18 @@ def make_pallas_sweep_fn(program, profile: Profile, *,
                          blk_b: int = 32,
                          interpret: Optional[bool] = None,
                          max_banks: int = DEFAULT_MAX_BANKS,
-                         validate: bool = True):
+                         validate: bool = True,
+                         reduce=None):
     """Build the Pallas-backed sweep function (see module docstring).
 
     program: ``Program`` (single-kernel API, ``fn(mem, hw)``) or a
-    sequence / ``ProgramBatch`` (``fn(mem, hw, prog_idx)``)."""
+    sequence / ``ProgramBatch`` (``fn(mem, hw, prog_idx)``).
+
+    reduce: an ``analysis.pareto`` reduction spec (``TopK`` /
+    ``ParetoFront``).  When given, the batch API becomes ``fn(mem, hw,
+    prog_idx, lane_idx) -> ReducedResult`` with the per-program
+    reduction fused into the same compiled program as the sweep engine
+    (the full ``(B,)`` grid never leaves the device)."""
     single = isinstance(program, Program)
     batch = as_program_batch(program)
     tables = batch_tables(batch)
@@ -187,6 +215,20 @@ def make_pallas_sweep_fn(program, profile: Profile, *,
         float(np.asarray(profile.e_sw_mux)),
         float(np.asarray(profile.mulzero)),
         float(np.asarray(profile.t_clk_ns)))
+
+    if reduce is not None:
+        if single:
+            raise ValueError("reduce= needs the batch API; pass a "
+                             "sequence of programs or a ProgramBatch")
+        rcore = _reduced_core(core, reduce, G)
+
+        def fn(mem_init: jnp.ndarray, hw: HwConfig, prog_idx, lane_idx):
+            if validate:
+                validate_bank_bound(hw.n_banks, max_banks,
+                                    where="cgra_sweep (backend='pallas')")
+            return rcore(tab, plen, prof, mem_init, hw, prog_idx, lane_idx)
+
+        return fn
 
     if single:
         def fn(mem_init: jnp.ndarray, hw: HwConfig):

@@ -220,15 +220,23 @@ def replicated_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def pad_batch(x: jnp.ndarray, target: int) -> jnp.ndarray:
-    """Pad a leading batch axis up to `target` rows by repeating row 0.
+def pad_batch(x: jnp.ndarray, target: int, fill=None) -> jnp.ndarray:
+    """Pad a leading batch axis up to `target` rows.
 
-    Sweep lanes are independent, so duplicated rows are harmless redundant
-    work; callers slice outputs back to the true length.  Used to make an
-    arbitrary design-point count divisible by the device count before
-    shard_map."""
+    By default the pad repeats row 0: sweep lanes are independent, so
+    duplicated rows are harmless redundant work; callers slice outputs
+    back to the true length.  Used to make an arbitrary design-point
+    count divisible by the device count before shard_map.
+
+    With ``fill`` the pad rows are that constant instead — the on-device
+    reduction path pads its ``lane_idx`` operand with ``fill=-1`` so the
+    duplicate lanes are *masked* (a repeated lane must not appear twice
+    in a top-k candidate set)."""
     pad = target - x.shape[0]
     if pad <= 0:
         return x
+    if fill is not None:
+        return jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
     return jnp.concatenate(
         [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])])

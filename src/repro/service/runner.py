@@ -51,10 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import pareto as _pareto
 from ..checkpoint import CheckpointManager
 from ..checkpoint.manager import load_tree
 from ..core import dse
-from ..core.autotune import AUTO, ShapeClass, default_cache
+from ..core.autotune import AUTO, ShapeClass, default_cache, is_auto, \
+    resolve_backend
 from ..core.characterization import Profile
 from ..core.dse import GridPlan, SweepResult
 from ..runtime import plan_downscale
@@ -158,6 +160,16 @@ class ResumableSweepRunner:
     several requests into one plan).  ``run()`` executes every pending
     unit and returns the stitched ``SweepResult`` plus a report; the
     server instead drives ``run_unit`` one unit at a time.
+
+    With ``reduce`` (an ``analysis.pareto`` spec) every unit reduces on
+    device and checkpoints its compacted ``(G, K)`` candidate set --
+    kilobytes per unit instead of the lane slice -- and ``stitch``
+    merges the unit fronts associatively (``merge_reduced``) into the
+    campaign's ``ReducedResult``.  A resumed campaign merges to the
+    bit-identical answer: units are reduced deterministically and the
+    merge does not care which process produced a unit.  The reduction
+    spec is part of the campaign fingerprint, so a checkpoint directory
+    cannot mix reduced and unreduced (or differently-reduced) units.
     """
 
     def __init__(self, program=None, profile: Profile = None,
@@ -169,6 +181,7 @@ class ResumableSweepRunner:
                  chunk_steps: Union[int, None, str] = AUTO,
                  blk_b: Union[int, str] = AUTO,
                  interpret: Optional[bool] = None,
+                 reduce: Optional[_pareto.Reduction] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  retry: Optional[RetryPolicy] = None,
                  injector: Optional[FaultInjector] = None,
@@ -191,15 +204,24 @@ class ResumableSweepRunner:
             * self._initial_ndev
         self.max_steps = max_steps
         self.mem_size = mem_size
-        self.backend = backend
         # AUTO knobs resolve through the per-shape autotune cache using
         # the service's lane-shape proxy (H = lanes per program, D = 1);
         # explicit values always win.  Resolution happens HERE so the
         # campaign fingerprint hashes concrete ints -- a checkpoint is
-        # resumable regardless of later cache changes.
+        # resumable regardless of later cache changes.  backend=AUTO
+        # resolves the same way (cached xla-vs-pallas winner, else xla;
+        # the runner never times candidates itself).
         G = plan.batch.n_programs
+        lanes_per_prog = max(1, plan.n_lanes // max(G, 1))
+        if is_auto(backend):
+            backend = resolve_backend(ShapeClass(
+                G=G, t_max=plan.batch.t_max, H=lanes_per_prog, D=1,
+                backend=AUTO, n_devices=self._initial_ndev))
+        self.backend = backend
+        self.reduce = reduce
+        self.G = G
         shape = ShapeClass(G=G, t_max=plan.batch.t_max,
-                           H=max(1, plan.n_lanes // max(G, 1)), D=1,
+                           H=lanes_per_prog, D=1,
                            backend=backend, n_devices=self._initial_ndev)
         cfg = default_cache().resolve(shape, blk_b=blk_b,
                                       chunk_steps=chunk_steps, max_buckets=1)
@@ -253,8 +275,9 @@ class ResumableSweepRunner:
         h.update(np.ascontiguousarray(self.plan.img_idx).tobytes())
         h.update(np.ascontiguousarray(self.plan.prog_idx).tobytes())
         h.update(json.dumps([self.max_steps, self.mem_size, self.unit_size,
-                             self.chunk_steps, self.backend,
-                             self.blk_b]).encode())
+                             self.chunk_steps, self.backend, self.blk_b,
+                             _pareto.spec_to_str(self.reduce)
+                             if self.reduce is not None else None]).encode())
         return h.hexdigest()
 
     # -- resume -------------------------------------------------------------
@@ -275,8 +298,11 @@ class ResumableSweepRunner:
                 raise CheckpointMismatch(
                     f"{path}: unit lane range {extra.get('lo')}:"
                     f"{extra.get('hi')} != planned {lo}:{hi}")
-            like = {f: np.zeros(hi - lo, _RESULT_DTYPES[f])
-                    for f in RESULT_FIELDS}
+            if self.reduce is not None:
+                like = _pareto.reduced_zeros(self.G, self.reduce)
+            else:
+                like = {f: np.zeros(hi - lo, _RESULT_DTYPES[f])
+                        for f in RESULT_FIELDS}
             self._results[step] = load_tree(like, path)
             stage = extra.get("backend", self._chain[0].name)
             if stage != self._chain[0].name:
@@ -299,7 +325,10 @@ class ResumableSweepRunner:
     def _unit_args(self, k: int):
         """Slice the plan for unit ``k``, padded to the common unit lane
         count with duplicates of the last real lane (independent lanes:
-        redundant work, never wrong results)."""
+        redundant work, never wrong results).  Under ``reduce`` the
+        returned lane row carries each lane's original flat grid index,
+        -1 on the duplicate pad lanes so the reducer masks them (a
+        repeated lane must not appear twice in a candidate set)."""
         lo, hi = self._unit_range(k)
         sel = np.minimum(np.arange(lo, lo + self._padded_unit), self.B - 1)
         idx = self.plan.img_idx[sel]
@@ -307,7 +336,11 @@ class ResumableSweepRunner:
         sel_j = jnp.asarray(sel)
         hw = jax.tree.map(lambda x: jnp.take(x, sel_j, axis=0),
                           self.plan.hw_grid)
-        return idx, hw, gi
+        lane = None
+        if self.reduce is not None:
+            n = np.arange(self._padded_unit)
+            lane = np.where(n < hi - lo, lo + n, -1).astype(np.int32)
+        return idx, hw, gi, lane
 
     # -- executables --------------------------------------------------------
     def _fn_for(self, stage: BackendStage) -> Callable:
@@ -318,7 +351,8 @@ class ResumableSweepRunner:
                 self.plan, self.profile, max_steps=self.max_steps,
                 mem_size=self.mem_size, backend=stage.backend,
                 chunk_steps=self.chunk_steps, blk_b=self.blk_b,
-                interpret=stage.interpret, mesh=self.mesh)
+                interpret=stage.interpret, mesh=self.mesh,
+                reduce=self.reduce)
             self._fns[key] = fn
         return fn
 
@@ -360,7 +394,7 @@ class ResumableSweepRunner:
     def _execute(self, k: int):
         """One unit through retry + degradation.  Returns
         (stage, attempts_on_stage, seconds, SweepResult)."""
-        idx, hw, gi = self._unit_args(k)
+        idx, hw, gi, lane = self._unit_args(k)
         chain = self._chain if self.retry.degrade else self._chain[:1]
         errors: List[str] = []
         for stage in chain:
@@ -370,7 +404,9 @@ class ResumableSweepRunner:
                     if self.injector is not None:
                         self.injector.on_attempt(k, attempt, stage.name)
                     t0 = self.clock()
-                    res = self._fn_for(stage)(idx, hw, gi)
+                    fn = self._fn_for(stage)
+                    res = fn(idx, hw, gi) if lane is None \
+                        else fn(idx, hw, gi, lane)
                     res = jax.block_until_ready(res)
                     secs = self.clock() - t0
                     if self.injector is not None:
@@ -410,8 +446,14 @@ class ResumableSweepRunner:
         node = self.monitor.nodes[k % len(self.monitor.nodes)]
 
         stage, attempts, secs, res = self._execute(k)
-        res_np = {f: np.asarray(getattr(res, f))[:hi - lo]
-                  for f in RESULT_FIELDS}
+        if self.reduce is not None:
+            # compacted (G, K) candidate set -- kilobytes, not the lane
+            # slice; pad lanes were masked on device, nothing to trim
+            res_np = {f: np.asarray(getattr(res, f))
+                      for f in _pareto.REDUCED_FIELDS}
+        else:
+            res_np = {f: np.asarray(getattr(res, f))[:hi - lo]
+                      for f in RESULT_FIELDS}
         if stage.name != self._chain[0].name:
             self.report.degraded[k] = stage.name
         rec = UnitRecord(unit=k, lo=lo, hi=hi, backend=stage.name,
@@ -450,13 +492,26 @@ class ResumableSweepRunner:
             self.report.units_skipped += 1
 
     # -- stitching ----------------------------------------------------------
-    def stitch(self, *, require_complete: bool = True) -> SweepResult:
+    def stitch(self, *, require_complete: bool = True
+               ) -> Union[SweepResult, _pareto.ReducedResult]:
         """Assemble the full-grid ``SweepResult`` from unit results
-        (checkpointed + freshly run).  Skipped units stitch as zeros."""
+        (checkpointed + freshly run).  Skipped units stitch as zeros.
+
+        Under ``reduce`` the unit candidate sets merge associatively
+        into the campaign ``ReducedResult`` instead (skipped units
+        simply contribute no candidates)."""
         missing = self.pending_units()
         if missing and require_complete:
             raise SweepUnitError(
                 f"cannot stitch: units {missing} incomplete")
+        if self.reduce is not None:
+            parts = [_pareto.ReducedResult(
+                **{f: res[f] for f in _pareto.REDUCED_FIELDS})
+                for _, res in sorted(self._results.items())]
+            if not parts:
+                return _pareto.ReducedResult(
+                    **_pareto.reduced_zeros(self.G, self.reduce))
+            return _pareto.merge_reduced(self.reduce, parts)
         out = {f: np.zeros(self.B, _RESULT_DTYPES[f])
                for f in RESULT_FIELDS}
         for k, res in self._results.items():
@@ -466,7 +521,8 @@ class ResumableSweepRunner:
         return SweepResult(**{f: jnp.asarray(out[f])
                               for f in RESULT_FIELDS})
 
-    def run(self) -> Tuple[SweepResult, RunnerReport]:
+    def run(self) -> Tuple[Union[SweepResult, _pareto.ReducedResult],
+                           RunnerReport]:
         """Execute every pending unit (resuming from checkpoints), wait
         for the last async save, and stitch."""
         t0 = self.clock()
@@ -495,6 +551,10 @@ def main(argv=None):
     ap.add_argument("--unit-size", type=int, default=4)
     ap.add_argument("--max-steps", type=int, default=256)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--reduce", default=None,
+                    help="on-device reduction spec, e.g. 'topk:energy_pj:4'"
+                         " or 'pareto:latency_cc,energy_pj:8' (see "
+                         "analysis.pareto.spec_from_str)")
     ap.add_argument("--out", default=None, help=".npz of the SweepResult")
     ap.add_argument("--report-out", default=None, help="report JSON path")
     args = ap.parse_args(argv)
@@ -514,15 +574,18 @@ def main(argv=None):
 
     fault_plan = FaultPlan.from_env()
     injector = FaultInjector(fault_plan) if fault_plan is not None else None
+    red = _pareto.spec_from_str(args.reduce) if args.reduce else None
     runner = ResumableSweepRunner(
         programs=[k.program for k in ks], profile=default_profile(),
         hw_configs=hws, mem_images=mems, ckpt_dir=args.ckpt_dir,
         unit_size=args.unit_size, max_steps=args.max_steps,
-        backend=args.backend, injector=injector)
+        backend=args.backend, injector=injector, reduce=red)
     res, report = runner.run()
     if args.out:
+        fields = _pareto.REDUCED_FIELDS if red is not None \
+            else RESULT_FIELDS
         np.savez(args.out, **{f: np.asarray(getattr(res, f))
-                              for f in RESULT_FIELDS})
+                              for f in fields})
     if args.report_out:
         Path(args.report_out).write_text(json.dumps(report.to_dict()))
     print(f"[sweep-runner] B={runner.B} lanes in {report.units_total} "

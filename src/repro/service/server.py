@@ -34,6 +34,15 @@ continuous-batching pattern applies:
     requests' ``on_partial`` callbacks in request-local lane
     coordinates, so a long campaign renders its Pareto front
     incrementally.
+  * **reduced requests**: a request carrying ``reduce=`` (an
+    ``analysis.pareto`` spec) gets its answer as compacted per-program
+    candidate sets -- ``(G_r, K)`` rows with candidate indices remapped
+    to request-local lane coordinates -- and every streamed partial is
+    the owning unit's front for that request's programs: the client
+    folds partials with ``merge_reduced`` and ends at exactly the
+    monolithic answer.  Only same-``reduce`` requests pack into one
+    slot (the merged campaign runs ONE fused reduction), and the
+    device->host bytes per unit are O(G*K), not the unit's lane count.
 
 All fault-tolerance (checkpoint/resume, retry, degradation, fleet
 monitoring) is inherited from the runner underneath.
@@ -50,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import pareto as _pareto
 from ..core.autotune import AUTO, DEFAULT_MAX_BUCKETS, is_auto
 from ..core.characterization import Profile
 from ..core.dse import GridPlan
@@ -70,6 +80,10 @@ class SweepRequest:
     mem_images: np.ndarray                     # (D, mem_size) int32
     deadline_s: Optional[float] = None         # relative to submission
     on_partial: Optional[Callable] = None      # (rid, lo, hi, {field: arr})
+    # on-device reduction spec: the request's answer (and each streamed
+    # partial) is a compacted per-program candidate set instead of the
+    # full lane arrays; candidate indices are request-local lane coords
+    reduce: Optional[_pareto.Reduction] = None
     # filled in by the service:
     rid: int = -1
     submitted_at: float = 0.0
@@ -85,7 +99,10 @@ class RequestResult:
     """Final per-request answer: this request's lane span of the merged
     grid, stitched (skipped units are zero) plus delivery metadata."""
     rid: int
-    arrays: Dict[str, np.ndarray]              # request-local (n_lanes,)
+    # request-local (n_lanes,) lane arrays; for a reduced request, the
+    # ReducedResult fields instead -- (G_r, K) candidates per program,
+    # indices in request-local lane coordinates
+    arrays: Dict[str, np.ndarray]
     expired: bool
     degraded_units: Dict[int, str]             # merged-unit -> stage name
     skipped_lanes: int
@@ -100,6 +117,15 @@ class _Slot:
         self.runner = runner
         self.members = members                 # (request, lane lo, lane hi)
         self.expired: set = set()              # rids past deadline
+        # program-row spans per member: the merged plan concatenates
+        # each request's programs in order, so request r owns segment
+        # rows [plo, phi) of any reduced result
+        self.prog_spans: List[Tuple[int, int]] = []
+        off = 0
+        for r, _, _ in members:
+            g = len(list(r.programs))
+            self.prog_spans.append((off, off + g))
+            off += g
 
     def requests(self) -> List[SweepRequest]:
         return [r for r, _, _ in self.members]
@@ -147,6 +173,20 @@ def _merge_plans(requests: Sequence[SweepRequest]) -> Tuple[
     return plan, members
 
 
+def _request_rows(arrays: Dict[str, np.ndarray], plo: int, phi: int,
+                  lane_lo: int) -> Dict[str, np.ndarray]:
+    """Slice one request's program rows out of a merged-grid reduced
+    result and remap candidate indices from merged-plan flat lanes to
+    request-local lane coordinates (a request's lanes are the
+    contiguous span starting at ``lane_lo``, program-major -- the same
+    layout a solo ``dse.sweep`` of that request would use)."""
+    out = {f: np.asarray(arrays[f])[plo:phi].copy()
+           for f in _pareto.REDUCED_FIELDS}
+    idx = out["indices"]
+    idx[idx >= 0] -= lane_lo
+    return out
+
+
 class SweepService:
     """Bounded-queue sweep server: pack, execute in units, stream."""
 
@@ -179,8 +219,16 @@ class SweepService:
         self.completed: Dict[int, RequestResult] = {}
         self._next_rid = 0
         # admission audit trail: one record per packed slot, for tests
-        # and ops visibility ({rids, t_max, window_tmaxes})
+        # and ops visibility ({rids, t_max, window_tmaxes, bucket_by})
         self.admission_log: List[dict] = []
+        # per-kernel observed ``steps_executed`` maxima (keyed by program
+        # name), updated as campaigns finish.  Static length is only a
+        # proxy for convoy cost -- a data-dependent tight loop makes a
+        # short kernel run long -- so once every kernel in an admission
+        # window has history, ``_admit`` buckets by how long kernels
+        # actually RAN (``bucket_programs(observed_steps=...)``) instead
+        # of their instruction count.
+        self.steps_history: Dict[str, int] = {}
 
     # -- admission ----------------------------------------------------------
     def submit(self, request: SweepRequest) -> int:
@@ -214,12 +262,27 @@ class SweepService:
                 n = self.queue[0].n_lanes
                 if pack and lanes + n > self.pack_max_lanes:
                     break
+                # a merged campaign runs ONE fused reduction: only
+                # same-reduce requests share a slot (frozen dataclass
+                # equality; differently-reduced/unreduced requests stay
+                # queued, FIFO preserved, and fill the next free slot)
+                if pack and self.queue[0].reduce != pack[0].reduce:
+                    break
                 pack.append(self.queue.popleft())
                 lanes += n
             tmaxes = [max(p.n_instrs for p in list(r.programs))
                       for r in pack]
+            # trip-count-aware bucketing: when every kernel in the window
+            # has observed-steps history, group requests by how long they
+            # actually run, not by static length (equal-length kernels
+            # with divergent trip counts would otherwise convoy)
+            hist = self.steps_history
+            by_steps = all(p.name in hist
+                           for r in pack for p in list(r.programs))
+            keys = [max(hist[p.name] for p in list(r.programs))
+                    for r in pack] if by_steps else tmaxes
             if len(pack) > 1 and self.max_buckets > 1:
-                groups = bucket_boundaries(tmaxes, self.max_buckets)
+                groups = bucket_boundaries(keys, self.max_buckets)
                 keep = next(set(g) for g in groups if 0 in g)
                 rest = [r for i, r in enumerate(pack) if i not in keep]
                 pack = [r for i, r in enumerate(pack) if i in keep]
@@ -229,12 +292,13 @@ class SweepService:
             self.admission_log.append({
                 "rids": [r.rid for r in pack],
                 "t_max": int(plan.batch.t_max),
-                "window_tmaxes": [int(t) for t in tmaxes]})
+                "window_tmaxes": [int(t) for t in tmaxes],
+                "bucket_by": "observed_steps" if by_steps else "length"})
             runner = ResumableSweepRunner(
                 plan=plan, profile=self.profile, unit_size=self.unit_size,
                 max_steps=self.max_steps, mem_size=self.mem_size,
                 backend=self.backend, retry=self.retry,
-                **self.runner_kw)
+                reduce=pack[0].reduce, **self.runner_kw)
             self._slots[si] = _Slot(runner, members)
 
     # -- execution ----------------------------------------------------------
@@ -258,30 +322,69 @@ class SweepService:
 
     def _deliver_partial(self, slot: _Slot, ulo: int, uhi: int,
                          res_np: Dict[str, np.ndarray]):
-        for r, lo, hi in slot.members:
+        red = slot.runner.reduce
+        for (r, lo, hi), (plo, phi) in zip(slot.members, slot.prog_spans):
             if r.on_partial is None:
                 continue
             a, b = max(lo, ulo), min(hi, uhi)
             if a < b:
-                part = {f: res_np[f][a - ulo:b - ulo]
-                        for f in RESULT_FIELDS}
+                if red is not None:
+                    # the unit's compacted front, this request's
+                    # program rows only, indices request-local: the
+                    # client folds partials with ``merge_reduced``
+                    part = _request_rows(res_np, plo, phi, lo)
+                else:
+                    part = {f: res_np[f][a - ulo:b - ulo]
+                            for f in RESULT_FIELDS}
                 r.on_partial(r.rid, a - lo, b - lo, part)
+
+    def _record_steps(self, r: SweepRequest, req_arrays: Dict[str, np.ndarray],
+                      *, reduced: bool):
+        """Fold a finished request's observed ``steps_executed`` into the
+        per-kernel history that drives trip-count-aware admission
+        bucketing.  A request's lanes are program-major, so program ``j``
+        owns ``n_lanes/G`` contiguous lanes; a reduced request only
+        reports its candidates' step counts (a lower bound on the true
+        per-kernel maximum -- still a far better convoy predictor than
+        static length).  Skipped/expired lanes are zero and never shrink
+        recorded history (max-fold, zero-guarded)."""
+        progs = list(r.programs)
+        st = np.asarray(req_arrays["steps_executed"])
+        if reduced:
+            per_prog = np.where(np.asarray(req_arrays["indices"]) >= 0,
+                                st, 0).max(axis=1, initial=0)
+        else:
+            per_prog = st.reshape(len(progs), -1).max(axis=1, initial=0)
+        for p, s in zip(progs, per_prog):
+            if s > 0:
+                self.steps_history[p.name] = max(
+                    self.steps_history.get(p.name, 0), int(s))
 
     def _finish(self, si: int):
         slot = self._slots[si]
+        red = slot.runner.reduce
         full = slot.runner.stitch(require_complete=False)
-        arrays = {f: np.asarray(getattr(full, f)) for f in RESULT_FIELDS}
+        if red is not None:
+            arrays = {f: np.asarray(getattr(full, f))
+                      for f in _pareto.REDUCED_FIELDS}
+        else:
+            arrays = {f: np.asarray(getattr(full, f))
+                      for f in RESULT_FIELDS}
         skipped = set(slot.runner._skipped)
-        for r, lo, hi in slot.members:
+        for (r, lo, hi), (plo, phi) in zip(slot.members, slot.prog_spans):
             sk = sum(max(0, min(hi, uhi) - max(lo, ulo))
                      for k in skipped
                      for ulo, uhi in [slot.runner._unit_range(k)])
             degr = {k: v for k, v in slot.runner.report.degraded.items()
                     if max(lo, slot.runner._unit_range(k)[0])
                     < min(hi, slot.runner._unit_range(k)[1])}
+            if red is not None:
+                req_arrays = _request_rows(arrays, plo, phi, lo)
+            else:
+                req_arrays = {f: arrays[f][lo:hi] for f in RESULT_FIELDS}
+            self._record_steps(r, req_arrays, reduced=red is not None)
             self.completed[r.rid] = RequestResult(
-                rid=r.rid,
-                arrays={f: arrays[f][lo:hi] for f in RESULT_FIELDS},
+                rid=r.rid, arrays=req_arrays,
                 expired=r.rid in slot.expired,
                 degraded_units=degr, skipped_lanes=sk)
         self._slots[si] = None
