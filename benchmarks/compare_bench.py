@@ -21,6 +21,10 @@ Gated metrics and tolerances (rel = allowed fractional drop vs baseline):
                                                unreduced/reduced steady
                                                seconds of the on-device
                                                reduction lane
+  mapping_search.batched_vs_loop    rel 0.25   higher is better -- one
+                                               packed (K mappings x H x D)
+                                               executable vs K per-
+                                               candidate plans
   mem_completion.speedup            rel 0.50   higher is better (tiny
                                                timings, noisiest ratio)
   recovery.checkpoint_overhead_pct  abs +8.0   lower is better (percentage
@@ -41,6 +45,12 @@ Hard invariants checked on the *current* run alone (no baseline needed):
                                                      grid, so smoke relies
                                                      on the baseline-
                                                      relative gate above)
+  mapping_search.all_verified                        every candidate matched
+                                                     the DAG oracle
+  mapping_search.edp_spread >= 1.0                   worst/best candidate
+                                                     EDP by construction
+  mapping_search.trace_counts_packed <= n_buckets    the mapping axis adds
+                                                     zero retraces
 
 Check the invariants of an already-written record (CI does this for the
 committed full-size BENCH_sim_throughput.json without re-running it):
@@ -70,6 +80,10 @@ CKPT_OVERHEAD_ABS_TOL = 8.0  # percentage points
 # on device must never cost more than 10% steady throughput.
 REDUCTION_REL_TOL = 0.15
 REDUCTION_STEADY_FLOOR = 0.9
+# Mapping-search lane: packed (K x H x D) executable vs K per-candidate
+# plans score the identical grid; a looser tolerance than multi_kernel
+# because K single-candidate plans amortize worse and jitter more.
+MAPPING_REL_TOL = 0.25
 
 
 def _mk_rows(payload: dict) -> dict:
@@ -117,6 +131,25 @@ def check_invariants(current: dict) -> List[str]:
                 f"reduction[{spec}]: steady_ratio={float(sr):.3f} < "
                 f"{REDUCTION_STEADY_FLOOR} (on-device reduction costs "
                 "more than 10% steady throughput)")
+    ms = current.get("mapping_search")
+    if ms:
+        if ms.get("all_verified") is False:
+            errors.append(
+                "mapping_search: a candidate schedule diverged from the "
+                "DAG oracle (correctness regression)")
+        spread = ms.get("edp_spread")
+        if spread is not None and float(spread) < 1.0:
+            errors.append(
+                f"mapping_search: edp_spread={float(spread):.3f} < 1.0 "
+                "(worst/best candidate EDP must be >= 1 by construction)")
+        traces, n_buckets = (ms.get("trace_counts_packed"),
+                             ms.get("n_buckets"))
+        if (traces is not None and n_buckets is not None
+                and traces > n_buckets):
+            errors.append(
+                f"mapping_search: trace_counts_packed={traces} > "
+                f"n_buckets={n_buckets} (the mapping axis must add zero "
+                "retraces over the bucketed path)")
     return errors
 
 
@@ -156,6 +189,12 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
                     float(base_red[spec]["steady_ratio"]),
                     float(cur_red[spec]["steady_ratio"]),
                     REDUCTION_REL_TOL)
+
+    b_map = baseline.get("mapping_search", {}).get("batched_vs_loop")
+    c_map = current.get("mapping_search", {}).get("batched_vs_loop")
+    if b_map is not None and c_map is not None:
+        gate_higher("mapping_search.batched_vs_loop", float(b_map),
+                    float(c_map), MAPPING_REL_TOL)
 
     b_mem = baseline.get("mem_completion", {}).get("speedup")
     c_mem = current.get("mem_completion", {}).get("speedup")

@@ -1,7 +1,7 @@
 """The "instantaneous result" claim (paper Section 1): design points per
 second through the fused simulate+estimate sweep.
 
-Six comparisons, all machine-readable in BENCH_sim_throughput.json so
+Seven comparisons, all machine-readable in BENCH_sim_throughput.json so
 the perf trajectory is trackable across PRs (schema: bench_schema.json,
 validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
@@ -21,6 +21,11 @@ validated in CI by benchmarks.validate_bench):
     the compiled sweep) -- device->host result bytes drop from O(B) to
     O(G*K) while steady throughput stays within noise, and the device
     candidates are re-checked bit-identical to the numpy oracle;
+  * mapping-search lane: seeded candidate enumeration throughput
+    (candidates/sec incl. oracle verification), the best-vs-worst
+    candidate EDP spread (why mapping search pays), and the packed
+    (K mappings x H x D) sweep vs K per-candidate loops
+    (``batched_vs_loop``, CI-gated) with packed trace counts;
   * the estimator's memory-contention scheduler: seed S x P Python loop
     vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16);
   * the crash-safe sweep service (service/runner): per-unit checkpoint
@@ -393,6 +398,100 @@ def _bench_reduction(rep: Report) -> list:
     return rows
 
 
+def _bench_mapping_search(rep: Report) -> dict:
+    """Mapping-as-a-sweep-axis lane: candidate generation throughput and
+    what sweeping the mapping axis *buys*.
+
+    * ``candidates_per_s``: seeded policy enumeration including the
+      per-candidate DAG-oracle verification (``mapper.generate_
+      candidates``) -- the host-side cost of opening the mapping axis;
+    * ``edp_spread`` = worst/best candidate EDP at each candidate's best
+      (hw, image) lane: how much a bad schedule costs, i.e. why mapping
+      search matters (invariant-gated >= 1);
+    * ``batched_vs_loop`` = per-candidate-loop / packed steady seconds
+      for scoring the identical (K x H x D) grid -- the packed mapping
+      axis reuses the bucketed multi-kernel machinery, so one held plan
+      (<= n_buckets cached executables, ``trace_counts_packed``) must
+      meet/beat K separately-held single-candidate plans exactly like
+      the multi-kernel lane (CI-gated vs baseline).
+    """
+    from repro.analysis.pareto import TopK
+    from repro.core.mapper import DAG, generate_candidates
+    from repro.core.program import MappingSet
+
+    d = DAG()
+    w = d.load(16)
+    for j in range(3 if SMOKE else 6):
+        m = d.alu("SMUL", d.load(j), w)
+        s = d.alu("SADD", m, d.load(32 + j))
+        d.store(64 + j, d.alu("SRA", s, d.const(2)))
+    K = 4 if SMOKE else 8
+
+    t0 = time.perf_counter()
+    cands = generate_candidates(d, K, seed=0, name="bench_axpy")
+    t_enum = time.perf_counter() - t0
+    ms = MappingSet.from_candidates([[c.program for c in cands]],
+                                    names=["bench_axpy"])
+
+    prof = default_profile()
+    hws = ([TOPOLOGIES["baseline"](), TOPOLOGIES["a_fast_mul"]()] if SMOKE
+           else [mk() for mk in TOPOLOGIES.values()])
+    rng = np.random.default_rng(0)
+    imgs = rng.integers(-100, 100, (2, 128)).astype(np.int32)
+    H, D = len(hws), imgs.shape[0]
+    B = ms.n_total * H * D
+    max_steps = 128 if SMOKE else 256
+    spec = TopK("edp", k=1)
+    kw = dict(max_steps=max_steps, mem_size=128, backend="xla",
+              reduce=spec)
+
+    base_traces = dse.TRACE_COUNTS["xla"]
+    fn_packed = dse.make_bucketed_sweep_fn(list(ms.programs), prof, hws,
+                                           imgs, **kw)
+    red = fn_packed()                                    # compile + warm
+    traces_packed = dse.TRACE_COUNTS["xla"] - base_traces
+    n_buckets = fn_packed.buckets.n_buckets
+
+    edp = (np.asarray(red.energy_pj)[:, 0].astype(np.float64)
+           * np.asarray(red.latency_cc)[:, 0])
+    best_edp, worst_edp = float(edp.min()), float(edp.max())
+
+    loop_fns = [dse.make_bucketed_sweep_fn([p], prof, hws, imgs, **kw)
+                for p in ms.programs]
+    for f in loop_fns:
+        f()                                              # compile + warm
+
+    # interleaved steady timing (same rationale as the reduction lane)
+    reps = 2 if SMOKE else 5
+    t_packed, t_loop = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_packed()
+        t_packed.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for f in loop_fns:
+            f()
+        t_loop.append(time.perf_counter() - t0)
+    steady_packed, steady_loop = min(t_packed), min(t_loop)
+
+    rec = dict(K=ms.n_total, H=H, D=D, B=B, backend="xla",
+               n_buckets=n_buckets, trace_counts_packed=traces_packed,
+               enumerate_seconds=t_enum,
+               candidates_per_s=ms.n_total / max(t_enum, 1e-9),
+               all_verified=True,         # generate_candidates raises else
+               best_edp=best_edp, worst_edp=worst_edp,
+               edp_spread=worst_edp / max(best_edp, 1e-9),
+               steady_seconds_packed=steady_packed,
+               steady_seconds_loop=steady_loop,
+               batched_vs_loop=steady_loop / max(steady_packed, 1e-9))
+    rep.add(path="mapping_search_packed_axis", B=B,
+            seconds_per_batch=steady_packed,
+            points_per_s=B / steady_packed, steps_per_s=B / steady_packed,
+            speedup_vs_single=rec["batched_vs_loop"],
+            edp_spread=round(rec["edp_spread"], 2))
+    return rec
+
+
 def _bench_mem_completion(rep: Report) -> dict:
     """Seed S x P double loop vs the vectorized greedy scheduler."""
     S, P = MEM_BENCH_STEPS, 16
@@ -496,6 +595,7 @@ def run() -> Report:
     _bench_backends(rep, rows)
     mk_rec = _bench_multi_kernel(rep)
     red_rec = _bench_reduction(rep)
+    map_rec = _bench_mapping_search(rep)
     mem_rec = _bench_mem_completion(rep)
     rec_rec = _bench_recovery(rep)
     payload = dict(
@@ -506,6 +606,7 @@ def run() -> Report:
         sweep=rows,
         multi_kernel=mk_rec,
         reduction=red_rec,
+        mapping_search=map_rec,
         mem_completion=mem_rec,
         recovery=rec_rec,
     )

@@ -1,6 +1,6 @@
 from .roofline import (HW_V5E, RooflineTerms, cell_roofline, model_flops,
                        load_dryrun_records, roofline_table)
 from .pareto import (OBJECTIVES, ParetoFront, ReducedResult, Reduction, TopK,
-                     make_device_reducer, merge_reduced, reduce_on_device,
-                     reduce_oracle, reduced_nbytes, remap_segments,
-                     spec_from_str, spec_to_str)
+                     fold_segments, make_device_reducer, merge_reduced,
+                     reduce_on_device, reduce_oracle, reduced_nbytes,
+                     remap_segments, spec_from_str, spec_to_str)

@@ -306,6 +306,44 @@ def remap_segments(part: ReducedResult, prog_map, index_offsets,
     return ReducedResult(count=count, clipped=clipped, **out)
 
 
+def fold_segments(spec: Reduction, part: ReducedResult, seg_of,
+                  n_out: int) -> ReducedResult:
+    """Fold fine segments into coarse ones and re-reduce.
+
+    Row ``j`` of ``part`` contributes its candidates to row
+    ``seg_of[j]`` of an ``(n_out, K)`` result -- e.g. per-``(kernel,
+    mapping)`` candidate rows fold into per-kernel rows, so a mapping
+    sweep ships back each kernel's best-mapping front.  Unlike
+    :func:`remap_segments` (a pure *relabeling*, rows must be distinct),
+    folding POOLS every source row that maps to the same target and
+    re-reduces with the numpy oracle, exactly like :func:`merge_reduced`.
+    Candidate ``indices`` are NOT shifted: a candidate's flat grid index
+    already encodes its fine-segment coordinate (``idx // (H*D)`` is the
+    flat candidate row), so the winning mapping id stays recoverable
+    after the fold.  Residual ``clipped`` counts are summed per target
+    row (TopK folds are exact; a clipped ParetoFront may have lost
+    points before the fold, same caveat as merging).
+    """
+    part = _as_numpy(part)
+    seg = np.asarray(seg_of, dtype=np.int64)
+    n_rows, K = part.indices.shape
+    if seg.shape != (n_rows,):
+        raise ValueError(
+            f"fold_segments: seg_of has shape {seg.shape}, expected "
+            f"({n_rows},) to match the {n_rows} reduced rows")
+    if seg.size and not (0 <= seg.min() and seg.max() < n_out):
+        raise ValueError(
+            f"fold_segments: seg_of out of range [0, {n_out})")
+    prog = np.repeat(seg, K)
+    fields = tuple(getattr(part, f).reshape(-1) for f in RESULT_FIELDS)
+    red = reduce_oracle(spec, fields, prog, part.indices.reshape(-1),
+                        n_out)
+    carried = np.zeros((n_out,), np.int64)
+    np.add.at(carried, seg, part.clipped.astype(np.int64))
+    return red._replace(
+        clipped=(red.clipped + carried).astype(np.int32))
+
+
 def _as_numpy(r: ReducedResult) -> ReducedResult:
     return ReducedResult(*(np.asarray(x) for x in r))
 

@@ -9,6 +9,7 @@ Public API:
   detailed.report                            -- post-synthesis stand-in
   bitstream.encode/decode                    -- deployment encoding
   pack_programs -> ProgramBatch              -- multi-kernel program axis
+  mapper: enumerate_mappings -> MappingSet   -- candidate mapping axis
   dse                                        -- mesh-sharded design sweeps
 """
 from . import bitstream, detailed, isa
@@ -21,6 +22,9 @@ from .hwconfig import (TOPOLOGIES, HwConfig, baseline, mod_a_fast_mul,
                        mod_b_n_to_m, mod_c_interleaved, mod_d_dma_per_pe,
                        stack_configs)
 from .physical import DEFAULT_PHYS, PhysicalModel
-from .program import (Program, ProgramBatch, ProgramBuilder, ProgramTables,
-                      assemble, pack_programs, program_tables)
+from .mapper import (DAG, MappingCandidate, MappingError, MappingPolicy,
+                     enumerate_mappings, generate_candidates, map_and_verify,
+                     map_dag)
+from .program import (MappingSet, Program, ProgramBatch, ProgramBuilder,
+                      ProgramTables, assemble, pack_programs, program_tables)
 from .trace import DenseTrace, densify

@@ -44,8 +44,9 @@ from .characterization import Profile
 from .hwconfig import HwConfig, stack_configs
 from .memory import (DEFAULT_MAX_BANKS, scoreboard_bound,
                      validate_bank_bound)
-from .program import (Program, ProgramBatch, as_program_batch, batch_tables,
-                      bucket_programs, fused_rows, program_tables)
+from .program import (MappingSet, Program, ProgramBatch, as_program_batch,
+                      batch_tables, bucket_programs, fused_rows,
+                      program_tables)
 
 # Incremented once per trace of each backend's sweep body (a Python side
 # effect only runs while tracing, never while executing the compiled
@@ -581,7 +582,9 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
           autotune: Optional[bool] = None,
           interpret: Optional[bool] = None,
           reduce: Optional[_pareto.Reduction] = None,
-          observed_steps: Optional[Sequence[int]] = None
+          observed_steps: Optional[Sequence[int]] = None,
+          mappings: Optional[MappingSet] = None,
+          fold_mappings: bool = True
           ) -> Union[SweepResult, _pareto.ReducedResult]:
     """Run the full (program x hw x data) grid through the lru-cached
     operand core(s), optionally sharded over every device of a mesh.
@@ -652,7 +655,35 @@ def sweep(program: Union[Program, ProgramBatch, Sequence[Program], None]
     *trip count* instead of static program length
     (``program.bucket_programs(observed_steps=...)``), which separates
     kernels whose runtimes diverge from their instruction counts.
+
+    mappings: a ``program.MappingSet`` -- mapping as a batched axis.
+    The K candidate schedules per kernel flatten onto the ordinary
+    program axis (B = K_total * H * D, per-lane ``prog_idx``, same
+    bucketing / retrace guarantees), so a candidate set costs one
+    compile per bucket, not one per mapping.  Without ``reduce`` the
+    full per-candidate lanes come back.  With ``reduce`` the
+    per-candidate rows are folded through the set's ``(kernel_id,
+    mapping_id)`` segment map (``analysis.pareto.fold_segments``) and
+    only each *kernel's* best-mapping front crosses to the caller --
+    candidate flat indices stay in candidate-lane coordinates, so the
+    winning mapping id is ``mappings.mapping_of[idx // (H*D)]``.  Pass
+    ``fold_mappings=False`` to keep per-candidate reduced rows.
     """
+    if mappings is not None:
+        if program is not None or programs is not None:
+            raise TypeError(
+                "sweep: pass mappings= OR program(s)=, not both")
+        res = sweep(programs=list(mappings.programs), profile=profile,
+                    hw_configs=hw_configs, mem_images=mem_images,
+                    mesh=mesh, max_steps=max_steps, mem_size=mem_size,
+                    backend=backend, chunk_steps=chunk_steps, blk_b=blk_b,
+                    max_buckets=max_buckets, autotune=autotune,
+                    interpret=interpret, reduce=reduce,
+                    observed_steps=observed_steps)
+        if reduce is not None and fold_mappings:
+            return _pareto.fold_segments(reduce, res, mappings.kernel_of,
+                                         mappings.n_kernels)
+        return res
     plan = plan_grid(program, hw_configs, mem_images, programs=programs)
     batch = plan.batch
     G = batch.n_programs
@@ -929,3 +960,141 @@ def make_bucketed_sweep_fn(programs, profile: Profile,
     fn.bucket_cfgs = bucket_cfgs
     fn.reduce = reduce
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Mapping search: the simulator as the inner loop of an optimizer
+# ---------------------------------------------------------------------------
+
+class MappingSearchResult(NamedTuple):
+    """Outcome of ``search_mappings``.
+
+    best / best_policy / best_score: per-kernel winner across every
+    round (score is the search objective at the winner's best (hw,
+    data) lane -- lower is better).  front: the final candidate set
+    reduced per kernel on device (each kernel's best-mapping front).
+    mappings: the final-round ``MappingSet`` (front rows index into
+    it).  history: one dict per round with per-kernel best/worst scores
+    and the candidate counts actually scored.
+    """
+    best: list
+    best_policy: list
+    best_score: np.ndarray
+    front: _pareto.ReducedResult
+    mappings: MappingSet
+    history: list
+
+
+def _candidate_scores(objective: str,
+                      red: _pareto.ReducedResult) -> np.ndarray:
+    """(n_rows,) objective value of each row's best lane (top-1 rows)."""
+    fields = [np.asarray(getattr(red, f))[:, 0]
+              for f in _pareto.RESULT_FIELDS]
+    vals = _pareto.objective_values(objective, fields)
+    return np.where(np.asarray(red.count) > 0, vals, np.inf)
+
+
+def search_mappings(dags: Sequence, profile: Profile,
+                    hw_configs: Sequence[HwConfig],
+                    mem_images: np.ndarray, *,
+                    k: int = 8, keep: int = 2, rounds: int = 2,
+                    seed: int = 0, objective: str = "edp",
+                    names: Optional[Sequence[str]] = None,
+                    rows: int = 4, cols: int = 4,
+                    max_steps: int = 2048, mem_size: int = 4096,
+                    backend: str = "xla",
+                    chunk_steps: Union[int, None, str] = AUTO,
+                    blk_b: Union[int, str] = AUTO,
+                    max_buckets: Union[int, str] = AUTO,
+                    interpret: Optional[bool] = None,
+                    reduce: Optional[_pareto.Reduction] = None
+                    ) -> MappingSearchResult:
+    """Greedy mapping refinement: sweep K candidates -> keep top-M ->
+    mutate -> re-sweep.  Closes the ROADMAP "close the loop" item: the
+    batched simulator is the inner loop of a schedule optimizer.
+
+    Per round, every kernel's candidate set (``mapper.generate_
+    candidates``: survivors' policies first, then seeded mutations of
+    them, then fresh shuffled policies; all deduped and verified against
+    ``DAG.evaluate``) is flattened into one ``MappingSet`` and scored
+    against the full (hw x data) grid by ONE held bucketed plan
+    (``make_bucketed_sweep_fn`` with an on-device top-1 reduction per
+    candidate) -- K·H·D design points per round for at most n_buckets
+    compiles, and later rounds with same-shape candidate sets hit the
+    lru-cached cores outright.  The per-kernel ``keep`` best (by
+    ``objective`` at each candidate's best lane) survive to seed the
+    next round; the best candidate ever seen is tracked across rounds.
+
+    Returns a :class:`MappingSearchResult`; ``front`` reduces the final
+    candidate set per kernel on device with ``reduce`` (default
+    ``TopK(objective, keep)``), exactly what ``sweep(mappings=...)``
+    ships back for a production-size search.
+    """
+    from .mapper import generate_candidates, mutate_policy
+
+    if keep < 1 or k < keep:
+        raise ValueError(f"need 1 <= keep <= k, got keep={keep} k={k}")
+    names = (list(names) if names is not None
+             else [f"kernel{g}" for g in range(len(dags))])
+    if len(names) != len(dags):
+        raise ValueError(f"{len(names)} names for {len(dags)} DAGs")
+    n_kernels = len(dags)
+    top1 = _pareto.TopK(objective, k=1)
+    H, D = len(hw_configs), int(mem_images.shape[0])
+
+    survivors = [None] * n_kernels      # per kernel: list[MappingCandidate]
+    best = [None] * n_kernels           # per kernel: (score, candidate)
+    history = []
+    mset = None
+    for r in range(rounds):
+        groups = []
+        for g, dag in enumerate(dags):
+            if r == 0:
+                cands = generate_candidates(dag, k, seed=seed + 7 * g,
+                                            rows=rows, cols=cols,
+                                            name=names[g])
+            else:
+                rng = np.random.default_rng(
+                    (seed + 1) * 9176 + 131 * r + g)
+                pols = [c.policy for c in survivors[g]]
+                while len(pols) < 3 * k:
+                    parent = survivors[g][
+                        int(rng.integers(0, len(survivors[g])))]
+                    pols.append(mutate_policy(parent.policy, rng))
+                cands = generate_candidates(dag, k, seed=seed,
+                                            rows=rows, cols=cols,
+                                            name=names[g], policies=pols)
+            groups.append(cands)
+        mset = MappingSet.from_candidates(
+            [[c.program for c in grp] for grp in groups], names=names)
+        plan_fn = make_bucketed_sweep_fn(
+            list(mset.programs), profile, hw_configs, mem_images,
+            max_steps=max_steps, mem_size=mem_size, backend=backend,
+            chunk_steps=chunk_steps, blk_b=blk_b, max_buckets=max_buckets,
+            interpret=interpret, reduce=top1)
+        scores = _candidate_scores(objective, plan_fn())
+        row = {"round": r, "n_candidates": [len(g) for g in groups],
+               "best": [], "worst": []}
+        offset = 0
+        for g, grp in enumerate(groups):
+            s = scores[offset:offset + len(grp)]
+            offset += len(grp)
+            order = np.argsort(s, kind="stable")
+            survivors[g] = [grp[i] for i in order[:keep]]
+            row["best"].append(float(s[order[0]]))
+            row["worst"].append(float(s[order[-1]]))
+            if best[g] is None or float(s[order[0]]) < best[g][0]:
+                best[g] = (float(s[order[0]]), grp[order[0]])
+        history.append(row)
+
+    front = sweep(mappings=mset, profile=profile, hw_configs=hw_configs,
+                  mem_images=mem_images, max_steps=max_steps,
+                  mem_size=mem_size, backend=backend,
+                  chunk_steps=chunk_steps, blk_b=blk_b,
+                  max_buckets=max_buckets, interpret=interpret,
+                  reduce=reduce or _pareto.TopK(objective, k=keep))
+    return MappingSearchResult(
+        best=[b[1].program for b in best],
+        best_policy=[b[1].policy for b in best],
+        best_score=np.asarray([b[0] for b in best], np.float64),
+        front=front, mappings=mset, history=history)

@@ -233,6 +233,101 @@ def as_program_batch(program) -> ProgramBatch:
 
 
 # --------------------------------------------------------------------------
+# Mapping sets: K candidate schedules per kernel, flattened to one
+# program axis
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MappingSet:
+    """Candidate mappings as a first-class batched axis.
+
+    ``programs`` is the *flattened* candidate list -- kernel 0's
+    candidates first, then kernel 1's, and so on -- and the two segment
+    maps tie each flat row back to its ``(kernel_id, mapping_id)``
+    coordinate.  Because the flattening is just a program sequence,
+    everything built for the program axis works unchanged: the set
+    ``pack_programs`` into a ProgramBatch, length-bucketing sees each
+    candidate as an ordinary program, and the service's trip-count
+    history keys on the (unique) candidate names.  Only the *reduction*
+    needs the segment map: fold the per-candidate rows of a reduced
+    sweep through ``kernel_of`` to get each kernel's best-mapping front
+    (``analysis.pareto.fold_segments``).
+    """
+    programs: Tuple[Program, ...]
+    kernel_of: np.ndarray          # (n_total,) int32 kernel id per row
+    mapping_of: np.ndarray         # (n_total,) int32 candidate id in kernel
+    kernel_names: Tuple[str, ...]  # (n_kernels,)
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.kernel_names)
+
+    @property
+    def n_total(self) -> int:
+        return len(self.programs)
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(n_kernels,) candidates per kernel."""
+        return np.bincount(self.kernel_of,
+                           minlength=self.n_kernels).astype(np.int32)
+
+    def candidates(self, g: int) -> Tuple[Program, ...]:
+        """Kernel ``g``'s candidate programs, in mapping_id order."""
+        return tuple(self.programs[i] for i in
+                     np.flatnonzero(self.kernel_of == g))
+
+    def pack(self, pad_slot: PEInstr = NOP_SLOT) -> ProgramBatch:
+        return pack_programs(self.programs, pad_slot)
+
+    @staticmethod
+    def from_candidates(candidates: Sequence[Sequence[Program]],
+                        names: Optional[Sequence[str]] = None,
+                        ) -> "MappingSet":
+        """Build from per-kernel candidate lists.
+
+        Candidate names must be unique across the whole flattened set
+        (bucketing and trip-count history key on them); duplicates are
+        rejected rather than silently renamed."""
+        cands = [tuple(group) for group in candidates]
+        if not cands or any(not g for g in cands):
+            raise ValueError(
+                "MappingSet: every kernel needs at least one candidate")
+        flat: List[Program] = []
+        kernel_of: List[int] = []
+        mapping_of: List[int] = []
+        for g, group in enumerate(cands):
+            for j, p in enumerate(group):
+                if not isinstance(p, Program):
+                    raise ValueError(
+                        f"MappingSet: kernel {g} candidate {j} is "
+                        f"{type(p).__name__}, expected Program")
+                flat.append(p)
+                kernel_of.append(g)
+                mapping_of.append(j)
+        seen: Dict[str, int] = {}
+        for i, p in enumerate(flat):
+            if p.name in seen:
+                raise ValueError(
+                    f"MappingSet: duplicate candidate name {p.name!r} "
+                    f"(rows {seen[p.name]} and {i}); candidate names "
+                    f"must be unique -- enumerate_mappings suffixes "
+                    f"them '#m<j>'")
+            seen[p.name] = i
+        if names is None:
+            names = tuple(group[0].name.split("#m")[0]
+                          for group in cands)
+        elif len(names) != len(cands):
+            raise ValueError(
+                f"MappingSet: {len(names)} names for {len(cands)} "
+                f"kernels")
+        return MappingSet(programs=tuple(flat),
+                          kernel_of=np.asarray(kernel_of, np.int32),
+                          mapping_of=np.asarray(mapping_of, np.int32),
+                          kernel_names=tuple(names))
+
+
+# --------------------------------------------------------------------------
 # Fused instruction rows: one gather per executed step
 # --------------------------------------------------------------------------
 

@@ -174,7 +174,8 @@ class ResumableSweepRunner:
 
     def __init__(self, program=None, profile: Profile = None,
                  hw_configs=None, mem_images=None, *,
-                 programs=None, plan: Optional[GridPlan] = None,
+                 programs=None, mappings=None,
+                 plan: Optional[GridPlan] = None,
                  ckpt_dir: Optional[str] = None, unit_size: int = 64,
                  max_steps: int = 2048, mem_size: int = 4096,
                  backend: str = "xla",
@@ -189,6 +190,18 @@ class ResumableSweepRunner:
                  clock: Callable[[], float] = time.perf_counter,
                  sleep: Callable[[float], None] = time.sleep,
                  on_unit=None, ckpt_async: bool = True):
+        if mappings is not None:
+            # mapping-search campaign: the candidate set flattens onto
+            # the ordinary program axis (a MappingSet IS a program
+            # sequence plus a segment map), so units, checkpoints, and
+            # the fingerprint all work unchanged; ``stitch_folded``
+            # collapses the reduced answer to per-kernel rows
+            if program is not None or programs is not None:
+                raise TypeError(
+                    "ResumableSweepRunner: pass mappings= OR "
+                    "program(s)=, not both")
+            programs = list(mappings.programs)
+        self.mappings = mappings
         if plan is None:
             plan = dse.plan_grid(program, hw_configs, mem_images,
                                  programs=programs)
@@ -520,6 +533,26 @@ class ResumableSweepRunner:
                 out[f][lo:hi] = res[f]
         return SweepResult(**{f: jnp.asarray(out[f])
                               for f in RESULT_FIELDS})
+
+    def stitch_folded(self, *, require_complete: bool = True
+                      ) -> _pareto.ReducedResult:
+        """Stitch a reduced mapping campaign and fold the per-candidate
+        rows to each kernel's best-mapping front
+        (``analysis.pareto.fold_segments`` over the MappingSet's
+        ``kernel_of`` segment map).  Candidate flat indices keep their
+        candidate-lane coordinates, so the winning mapping id is
+        ``mappings.mapping_of[idx // (H*D)]``.  Requires ``mappings=``
+        and ``reduce=``; the fold is a host-side O(G*K) pass, so
+        crash-safety is untouched -- checkpointed units stay
+        per-candidate and a resumed campaign folds bit-identically."""
+        if self.mappings is None or self.reduce is None:
+            raise ValueError(
+                "stitch_folded needs a mapping campaign (mappings=) "
+                "with an on-device reduction (reduce=)")
+        part = self.stitch(require_complete=require_complete)
+        return _pareto.fold_segments(self.reduce, part,
+                                     self.mappings.kernel_of,
+                                     self.mappings.n_kernels)
 
     def run(self) -> Tuple[Union[SweepResult, _pareto.ReducedResult],
                            RunnerReport]:

@@ -44,6 +44,16 @@ continuous-batching pattern applies:
     slot (the merged campaign runs ONE fused reduction), and the
     device->host bytes per unit are O(G*K), not the unit's lane count.
 
+  * **mapping-search campaigns**: a request carrying ``mappings=`` (a
+    ``core.program.MappingSet``) has its K candidate schedules per
+    kernel expanded onto the program axis at admission -- candidates
+    pack, bucket, and record trip-count history exactly like ordinary
+    kernels -- and a reduced mapping request's answer (and every
+    streamed partial) is folded back to *per-kernel* winner rows in
+    request-local coordinates (``analysis.pareto.fold_segments``), so
+    a mapping search over the service ships back one front per kernel,
+    not per candidate.
+
 All fault-tolerance (checkpoint/resume, retry, degradation, fleet
 monitoring) is inherited from the runner underneath.
 """
@@ -64,7 +74,7 @@ from ..core.autotune import AUTO, DEFAULT_MAX_BUCKETS, is_auto
 from ..core.characterization import Profile
 from ..core.dse import GridPlan
 from ..core.hwconfig import stack_configs
-from ..core.program import bucket_boundaries, pack_programs
+from ..core.program import MappingSet, bucket_boundaries, pack_programs
 from .runner import RESULT_FIELDS, ResumableSweepRunner, RetryPolicy
 
 
@@ -74,19 +84,46 @@ class ServiceOverloaded(RuntimeError):
 
 @dataclasses.dataclass
 class SweepRequest:
-    """One client's (programs x hw x images) sub-grid."""
-    programs: Sequence
-    hw_configs: Sequence
-    mem_images: np.ndarray                     # (D, mem_size) int32
+    """One client's (programs x hw x images) sub-grid.
+
+    A mapping-search campaign passes ``mappings=`` (a
+    ``core.program.MappingSet``) instead of ``programs``: the candidate
+    schedules are expanded onto the program axis at admission (each
+    candidate is an ordinary lane segment of the merged grid -- packing,
+    bucketing, and trip-count history all see plain programs), and a
+    *reduced* mapping request's answer is folded back to per-kernel
+    winners in request-local coordinates: ``arrays`` has one row per
+    kernel, and a candidate index ``idx`` decodes as mapping
+    ``mappings.mapping_of[idx // (H*D)]`` at hw/image ``divmod(idx %
+    (H*D), D)``.  Streamed partials are folded the same way, so clients
+    keep folding with ``merge_reduced`` exactly as before.  An
+    *unreduced* mapping request gets the full per-candidate lane
+    arrays (candidate-major)."""
+    programs: Optional[Sequence] = None
+    hw_configs: Sequence = ()
+    mem_images: np.ndarray = None              # (D, mem_size) int32
     deadline_s: Optional[float] = None         # relative to submission
     on_partial: Optional[Callable] = None      # (rid, lo, hi, {field: arr})
     # on-device reduction spec: the request's answer (and each streamed
     # partial) is a compacted per-program candidate set instead of the
     # full lane arrays; candidate indices are request-local lane coords
     reduce: Optional[_pareto.Reduction] = None
+    # candidate-mapping campaign: expanded to programs at construction
+    mappings: Optional[MappingSet] = None
     # filled in by the service:
     rid: int = -1
     submitted_at: float = 0.0
+
+    def __post_init__(self):
+        if self.mappings is not None:
+            if self.programs:
+                raise ValueError(
+                    "SweepRequest: pass mappings= OR programs=, not "
+                    "both")
+            self.programs = list(self.mappings.programs)
+        elif not self.programs:
+            raise ValueError(
+                "SweepRequest: needs programs= or mappings=")
 
     @property
     def n_lanes(self) -> int:
@@ -185,6 +222,22 @@ def _request_rows(arrays: Dict[str, np.ndarray], plo: int, phi: int,
     idx = out["indices"]
     idx[idx >= 0] -= lane_lo
     return out
+
+
+def _fold_request(spec: _pareto.Reduction,
+                  req_arrays: Dict[str, np.ndarray],
+                  mappings: MappingSet) -> Dict[str, np.ndarray]:
+    """Fold a mapping request's per-candidate reduced rows (already in
+    request-local coordinates) into per-kernel winner rows via the
+    set's ``kernel_of`` segment map.  Indices keep their request-local
+    candidate-lane values, so mapping/hw/image coordinates stay
+    decodable (see ``SweepRequest``)."""
+    part = _pareto.ReducedResult(
+        **{f: req_arrays[f] for f in _pareto.REDUCED_FIELDS})
+    folded = _pareto.fold_segments(spec, part, mappings.kernel_of,
+                                   mappings.n_kernels)
+    return {f: np.asarray(getattr(folded, f))
+            for f in _pareto.REDUCED_FIELDS}
 
 
 class SweepService:
@@ -331,8 +384,13 @@ class SweepService:
                 if red is not None:
                     # the unit's compacted front, this request's
                     # program rows only, indices request-local: the
-                    # client folds partials with ``merge_reduced``
+                    # client folds partials with ``merge_reduced``.
+                    # Mapping campaigns fold candidates -> kernels
+                    # first, so every partial already has per-kernel
+                    # rows (merging folded parts stays exact for TopK)
                     part = _request_rows(res_np, plo, phi, lo)
+                    if r.mappings is not None:
+                        part = _fold_request(red, part, r.mappings)
                 else:
                     part = {f: res_np[f][a - ulo:b - ulo]
                             for f in RESULT_FIELDS}
@@ -382,7 +440,11 @@ class SweepService:
                 req_arrays = _request_rows(arrays, plo, phi, lo)
             else:
                 req_arrays = {f: arrays[f][lo:hi] for f in RESULT_FIELDS}
+            # trip-count history records per-CANDIDATE rows (aligned
+            # with r.programs), so it must run before any mapping fold
             self._record_steps(r, req_arrays, reduced=red is not None)
+            if red is not None and r.mappings is not None:
+                req_arrays = _fold_request(red, req_arrays, r.mappings)
             self.completed[r.rid] = RequestResult(
                 rid=r.rid, arrays=req_arrays,
                 expired=r.rid in slot.expired,

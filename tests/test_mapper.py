@@ -4,7 +4,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.mapper import DAG, MappingError, map_and_verify, map_dag
+from repro.core.hwconfig import TOPOLOGIES
+from repro.core.mapper import (DAG, MappingError, MappingPolicy,
+                               canonical_policies, enumerate_mappings,
+                               generate_candidates, map_and_verify,
+                               map_dag, mutate_policy)
 
 MEM = 128
 
@@ -116,6 +120,144 @@ def test_random_dags_map_correctly(d, seed):
     except MappingError:
         return                        # documented capacity limits
     assert ok
+
+
+def test_mapping_error_register_pressure_has_context():
+    """Satellite regression: pressure failures name the PE, the node
+    (index, op, level), and a remedy -- not a bare 'pressure >4'."""
+    d = DAG()
+    loads = [d.load(i) for i in range(10)]
+    prods = [d.alu("SMUL", loads[i], loads[i + 1]) for i in range(0, 10, 2)]
+    acc = prods[0]
+    for p in prods[1:]:
+        acc = d.alu("SADD", acc, p)
+    d.store(100, acc)
+    with pytest.raises(MappingError) as ei:
+        map_dag(d, rows=1, cols=2)     # 2 PEs: must run out of registers
+    msg = str(ei.value)
+    assert "register pressure >4 on PE" in msg
+    assert "node" in msg and "level" in msg
+    assert "(load, level 0)" in msg or "(SMUL, level 1)" in msg
+    assert "tile the kernel" in msg
+
+
+def test_mapping_error_infeasible_enumeration_has_context():
+    """When no policy maps, the enumeration error carries the DAG size,
+    the array shape, and the first underlying failure."""
+    d = DAG()
+    loads = [d.load(i) for i in range(12)]
+    acc = loads[0]
+    for x in loads[1:]:
+        acc = d.alu("LXOR", acc, x)
+    outs = [d.alu("SMUL", loads[i], loads[i + 1]) for i in range(0, 12, 2)]
+    s = outs[0]
+    for o in outs[1:]:
+        s = d.alu("SADD", s, o)
+    d.store(100, s)
+    d.store(101, acc)
+    with pytest.raises(MappingError) as ei:
+        enumerate_mappings(d, 4, seed=0, rows=1, cols=1)
+    msg = str(ei.value)
+    assert "no feasible mapping" in msg
+    assert f"{len(d.nodes)}-node DAG" in msg and "1x1 array" in msg
+    assert "first failure:" in msg and "register pressure" in msg
+
+
+def test_policy_validation_and_mutation():
+    with pytest.raises(ValueError):
+        MappingPolicy(pe_order="diagonal")
+    with pytest.raises(ValueError):
+        MappingPolicy(placement="cluster")
+    with pytest.raises(ValueError):
+        MappingPolicy(route_axis="spiral")
+    assert len({p for p in canonical_policies()}) == 8
+    rng = np.random.default_rng(0)
+    pol = MappingPolicy()
+    for _ in range(20):
+        nxt = mutate_policy(pol, rng)
+        assert nxt != pol              # a move always changes something
+        pol = nxt
+
+
+def _random_straight_line_dag(rng):
+    """Mixed const/load/ALU/store with varying fan-out (a value may feed
+    several consumers), bounded live ranges so 16 PEs x 4 regs suffice."""
+    d = DAG()
+    vals = [d.load(int(rng.integers(0, 32)))
+            for _ in range(int(rng.integers(1, 4)))]
+    ops = ["SADD", "SSUB", "SMUL", "SLL", "SRA", "LAND", "LOR", "LXOR",
+           "SLT"]
+    n_stores = 0
+    for _ in range(int(rng.integers(2, 12))):
+        pool = vals[-4:]
+        a = pool[int(rng.integers(0, len(pool)))]
+        if rng.random() < 0.3:
+            b = d.const(int(rng.integers(-50, 50)))
+        else:
+            b = pool[int(rng.integers(0, len(pool)))]
+        v = d.alu(ops[int(rng.integers(0, len(ops)))], a, b)
+        vals.append(v)
+        if rng.random() < 0.2 and n_stores < 8:
+            d.store(64 + n_stores, v)
+            n_stores += 1
+    d.store(64 + n_stores, vals[-1])
+    return d
+
+
+def test_seeded_random_dags_all_topologies_and_candidates():
+    """Satellite property test: random straight-line DAGs verify against
+    the DAG.evaluate oracle on EVERY topology, and every enumerated
+    candidate is bit-identical to the oracle in simulation."""
+    from repro.core.cgra import run_program
+    rng = np.random.default_rng(1234)
+    checked_candidates = 0
+    for trial in range(6):
+        d = _random_straight_line_dag(rng)
+        mem = rng.integers(-1000, 1000, MEM).astype(np.int32)
+        want = d.evaluate(mem)
+        for tname, mk in TOPOLOGIES.items():
+            _, got, ok = map_and_verify(d, mem, hw=mk())
+            assert ok, f"trial {trial} diverges on topology {tname}"
+            np.testing.assert_array_equal(got, want)
+        for prog in enumerate_mappings(d, 4, seed=trial, mem_probe=mem):
+            final, _ = run_program(prog, mem, max_steps=prog.n_instrs + 2)
+            np.testing.assert_array_equal(np.asarray(final.mem), want)
+            checked_candidates += 1
+    assert checked_candidates >= 12    # candidate diversity actually hit
+
+
+def test_enumerate_mappings_distinct_verified_and_deterministic():
+    d = DAG()
+    w = d.const(3)
+    for j in range(5):
+        t = d.alu("SMUL", d.load(j), w)
+        t = d.alu("SADD", t, d.load(16 + j))
+        d.store(32 + j, d.alu("SRA", t, d.const(2)))
+    progs = enumerate_mappings(d, 8, seed=7)
+    assert len(progs) == 8
+    keys = {(p.ops.tobytes(), p.imm.tobytes(), p.dest.tobytes())
+            for p in progs}
+    assert len(keys) == 8              # dedup by content held
+    assert len({p.name for p in progs}) == 8   # unique '#m<j>' names
+    assert len({p.n_instrs for p in progs}) >= 2   # schedules differ
+    again = enumerate_mappings(d, 8, seed=7)
+    for p, q in zip(progs, again):     # same seed -> same stream
+        assert p.ops.tobytes() == q.ops.tobytes()
+    cands = generate_candidates(d, 8, seed=7)
+    assert [c.program.name for c in cands] == [p.name for p in progs]
+
+
+def test_default_policy_matches_legacy_mapper():
+    """policy=None must be the exact legacy schedule (row-major chain,
+    column-first routing) -- candidate 0 is the old map_dag output."""
+    d = DAG()
+    acc = d.alu("SMUL", d.load(0), d.load(1))
+    acc = d.alu("SADD", acc, d.load(2))
+    d.store(100, acc)
+    a = map_dag(d)
+    b = map_dag(d, policy=MappingPolicy())
+    assert a.ops.tobytes() == b.ops.tobytes()
+    assert a.imm.tobytes() == b.imm.tobytes()
 
 
 def test_mapped_kernel_is_estimable(profile):

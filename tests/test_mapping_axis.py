@@ -1,0 +1,389 @@
+"""Mapping as a sweep axis: a MappingSet's K candidate schedules per
+kernel flatten onto the program axis (one compiled executable for the
+whole K x H x D grid), reduce per (kernel, mapping) segment, and fold to
+each kernel's best-mapping front -- bit-identical to the per-candidate
+loop, on both backends, 1 device or a mesh, through sweep / service /
+resumable runner."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.pareto import (REDUCED_FIELDS, RESULT_FIELDS, TopK,
+                                   ParetoFront, ReducedResult,
+                                   fold_segments, merge_reduced,
+                                   reduce_oracle)
+from repro.core import dse
+from repro.core.cgra import run_program
+from repro.core.hwconfig import baseline
+from repro.core.mapper import DAG, generate_candidates
+from repro.core.program import MappingSet
+
+MEM = 128
+MAX_STEPS = 128
+SWEEP_FIELDS = ("latency_cc", "energy_pj", "power_mw", "checksum",
+                "steps_executed")
+
+
+def _dag(n):
+    d = DAG()
+    w = d.const(3 + n)
+    for j in range(4 + n):
+        t = d.alu("SMUL", d.load(j), w)
+        t = d.alu("SADD", t, d.load(16 + j))
+        d.store(32 + j, d.alu("SRA", t, d.const(2)))
+    return d
+
+
+@pytest.fixture(scope="module")
+def mset():
+    groups = [generate_candidates(_dag(g), 3, seed=g, name=f"k{g}")
+              for g in range(2)]
+    return MappingSet.from_candidates(
+        [[c.program for c in g] for g in groups], names=["k0", "k1"])
+
+
+@pytest.fixture(scope="module")
+def grid():
+    rng = np.random.default_rng(0)
+    mems = rng.integers(-100, 100, (2, MEM)).astype(np.int32)
+    return {"hw_configs": [baseline(), baseline().replace(smul_lat=3)],
+            "mem_images": mems}
+
+
+def _sweep_kw(grid, **kw):
+    return dict(hw_configs=grid["hw_configs"],
+                mem_images=grid["mem_images"], max_steps=MAX_STEPS,
+                mem_size=MEM, **kw)
+
+
+# ---------------------------------------------------------------------------
+# MappingSet container
+# ---------------------------------------------------------------------------
+
+def test_mapping_set_segment_maps(mset):
+    assert mset.n_kernels == 2 and mset.n_total == 6
+    np.testing.assert_array_equal(mset.kernel_of, [0, 0, 0, 1, 1, 1])
+    np.testing.assert_array_equal(mset.mapping_of, [0, 1, 2, 0, 1, 2])
+    np.testing.assert_array_equal(mset.counts, [3, 3])
+    assert [p.name for p in mset.candidates(1)] == \
+        ["k1#m0", "k1#m1", "k1#m2"]
+    batch = mset.pack()
+    assert batch.n_programs == 6
+    assert batch.names == tuple(p.name for p in mset.programs)
+
+
+def test_mapping_set_validation(mset):
+    with pytest.raises(ValueError, match="at least one candidate"):
+        MappingSet.from_candidates([[], [mset.programs[0]]])
+    with pytest.raises(ValueError, match="duplicate candidate name"):
+        MappingSet.from_candidates([[mset.programs[0]],
+                                    [mset.programs[0]]])
+    with pytest.raises(ValueError, match="names for"):
+        MappingSet.from_candidates([[mset.programs[0]]],
+                                   names=["a", "b"])
+
+
+# ---------------------------------------------------------------------------
+# fold_segments
+# ---------------------------------------------------------------------------
+
+def test_fold_segments_pools_and_rereduces():
+    """Folding two fine rows into one coarse row re-reduces the pooled
+    candidates (remap_segments would have silently overwritten)."""
+    spec = TopK("latency_cc", 2)
+    part = ReducedResult(
+        indices=np.array([[0, 1], [10, 11]], np.int32),
+        latency_cc=np.array([[5, 9], [3, 7]], np.float32),
+        energy_pj=np.zeros((2, 2), np.float32),
+        power_mw=np.zeros((2, 2), np.float32),
+        checksum=np.zeros((2, 2), np.int32),
+        steps_executed=np.zeros((2, 2), np.int32),
+        count=np.array([2, 2], np.int32),
+        clipped=np.array([0, 1], np.int32))
+    out = fold_segments(spec, part, [0, 0], 1)
+    np.testing.assert_array_equal(out.indices, [[10, 0]])
+    np.testing.assert_array_equal(out.latency_cc, [[3.0, 5.0]])
+    np.testing.assert_array_equal(out.count, [2])
+    np.testing.assert_array_equal(out.clipped, [1])   # carried through
+    with pytest.raises(ValueError, match="seg_of"):
+        fold_segments(spec, part, [0], 1)
+    with pytest.raises(ValueError, match="out of range"):
+        fold_segments(spec, part, [0, 3], 2)
+
+
+# ---------------------------------------------------------------------------
+# sweep(mappings=...): parity with the per-candidate loop, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sweep_mappings_parity_vs_candidate_loop(mset, grid, profile,
+                                                 backend):
+    """Unreduced sweep(mappings=...) == looping run of each candidate
+    alone: lane (c, h, d) of the flattened grid is bit-identical to the
+    candidate's solo sweep (candidates are just programs)."""
+    full = dse.sweep(mappings=mset, profile=profile, backend=backend,
+                     **_sweep_kw(grid))
+    H = len(grid["hw_configs"])
+    D = grid["mem_images"].shape[0]
+    for c, prog in enumerate(mset.programs):
+        solo = dse.sweep(program=[prog], profile=profile, backend=backend,
+                         **_sweep_kw(grid))
+        for f in SWEEP_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(full, f))[c * H * D:(c + 1) * H * D],
+                np.asarray(getattr(solo, f)),
+                err_msg=f"{backend} candidate {c} field {f}")
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_acceptance_k8_one_executable_reduced_equals_loop_oracle(
+        grid, profile, backend):
+    """The PR acceptance drill: ONE compiled executable scores a
+    (K mappings x H hw x D data) grid with K >= 8 -- TRACE_COUNTS grows
+    by at most n_buckets -- and the device-reduced per-kernel best
+    mapping is bit-identical to the per-candidate loop oracle."""
+    cands = generate_candidates(_dag(1), 8, seed=3, name="kA")
+    assert len(cands) >= 8
+    ms = MappingSet.from_candidates([[c.program for c in cands]],
+                                    names=["kA"])
+    H = len(grid["hw_configs"])
+    D = grid["mem_images"].shape[0]
+    spec = TopK("edp", 4)
+
+    base = dse.TRACE_COUNTS[backend]
+    red = dse.sweep(mappings=ms, profile=profile, backend=backend,
+                    reduce=spec, **_sweep_kw(grid))
+    n_buckets = len(dse.make_bucketed_sweep_fn(
+        list(ms.programs), profile, backend=backend,
+        **_sweep_kw(grid)).buckets.batches)
+    assert dse.TRACE_COUNTS[backend] - base <= n_buckets
+
+    # per-candidate loop oracle: solo-sweep each candidate, reduce the
+    # pooled lanes per kernel with the numpy oracle
+    fields = {f: [] for f in SWEEP_FIELDS}
+    for prog in ms.programs:
+        solo = dse.sweep(program=[prog], profile=profile, backend=backend,
+                         **_sweep_kw(grid))
+        for f in SWEEP_FIELDS:
+            fields[f].append(np.asarray(getattr(solo, f)))
+    flat = {f: np.concatenate(v) for f, v in fields.items()}
+    B = ms.n_total * H * D
+    prog_of = ms.kernel_of[np.arange(B) // (H * D)]
+    want = reduce_oracle(spec, [flat[f] for f in SWEEP_FIELDS],
+                         prog_of, np.arange(B), ms.n_kernels)
+    for f in REDUCED_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(red, f)), np.asarray(getattr(want, f)),
+            err_msg=f"{backend} {f}")
+    # the winner's mapping id is recoverable from its flat index
+    win = int(np.asarray(red.indices)[0, 0])
+    assert 0 <= ms.mapping_of[win // (H * D)] < 8
+
+
+def test_sweep_mappings_unfolded_and_arg_validation(mset, grid, profile):
+    spec = TopK("edp", 2)
+    per_cand = dse.sweep(mappings=mset, profile=profile, reduce=spec,
+                         fold_mappings=False, **_sweep_kw(grid))
+    assert np.asarray(per_cand.indices).shape == (mset.n_total, 2)
+    folded = fold_segments(spec, per_cand, mset.kernel_of, mset.n_kernels)
+    direct = dse.sweep(mappings=mset, profile=profile, reduce=spec,
+                       **_sweep_kw(grid))
+    for f in REDUCED_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(folded, f)),
+                                      np.asarray(getattr(direct, f)))
+    with pytest.raises(TypeError, match="not both"):
+        dse.sweep(mappings=mset, programs=list(mset.programs),
+                  profile=profile, **_sweep_kw(grid))
+
+
+# ---------------------------------------------------------------------------
+# Mesh: 8 forced host devices (subprocess), both backends
+# ---------------------------------------------------------------------------
+
+def test_sweep_mappings_mesh_8_devices():
+    """Mapping axis == program axis under sharding too: the folded
+    reduced result and the raw lanes match the unsharded answer on an
+    8-device mesh, both backends (discrete fields exact, float32
+    accumulators at the cross-shape rtol=1e-6 convention)."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.analysis.pareto import REDUCED_FIELDS, TopK
+        from repro.core import dse
+        from repro.core.characterization import default_profile
+        from repro.core.hwconfig import baseline
+        from repro.core.mapper import DAG, generate_candidates
+        from repro.core.program import MappingSet
+
+        def dag(n):
+            d = DAG()
+            w = d.const(3 + n)
+            for j in range(4 + n):
+                t = d.alu("SMUL", d.load(j), w)
+                t = d.alu("SADD", t, d.load(16 + j))
+                d.store(32 + j, d.alu("SRA", t, d.const(2)))
+            return d
+
+        groups = [generate_candidates(dag(g), 3, seed=g, name=f"k{g}")
+                  for g in range(2)]
+        ms = MappingSet.from_candidates(
+            [[c.program for c in g] for g in groups], names=["k0", "k1"])
+        rng = np.random.default_rng(0)
+        kw = dict(mappings=ms, profile=default_profile(),
+                  hw_configs=[baseline(), baseline().replace(smul_lat=3)],
+                  mem_images=rng.integers(-100, 100, (2, 128)
+                                          ).astype(np.int32),
+                  max_steps=128, mem_size=128)
+        mesh = jax.make_mesh((8,), ("data",))
+        spec = TopK("edp", 3)
+        for backend in ("xla", "pallas"):
+            ref = dse.sweep(**kw, backend=backend, reduce=spec)
+            got = dse.sweep(**kw, backend=backend, mesh=mesh, reduce=spec)
+            for f in REDUCED_FIELDS:
+                a, b = (np.asarray(getattr(ref, f)),
+                        np.asarray(getattr(got, f)))
+                if f in ("energy_pj", "power_mw"):
+                    np.testing.assert_allclose(a, b, rtol=1e-6,
+                                               err_msg=f"{backend} {f}")
+                else:
+                    np.testing.assert_array_equal(
+                        a, b, err_msg=f"{backend} {f}")
+            raw_ref = dse.sweep(**kw, backend=backend)
+            raw_got = dse.sweep(**kw, backend=backend, mesh=mesh)
+            np.testing.assert_array_equal(
+                np.asarray(raw_ref.latency_cc),
+                np.asarray(raw_got.latency_cc), err_msg=backend)
+        print("MESH_MAPPINGS_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", prog], env=env,
+                       cwd=str(Path(__file__).resolve().parents[1]),
+                       capture_output=True, text=True)
+    assert "MESH_MAPPINGS_OK" in r.stdout, (r.stdout[-1500:],
+                                            r.stderr[-1500:])
+
+
+# ---------------------------------------------------------------------------
+# search_mappings: the closed loop
+# ---------------------------------------------------------------------------
+
+def test_search_mappings_refines_and_verifies(grid, profile):
+    dags = [_dag(0), _dag(2)]
+    res = dse.search_mappings(dags, profile, grid["hw_configs"],
+                              grid["mem_images"], k=4, keep=2, rounds=2,
+                              seed=0, max_steps=MAX_STEPS, mem_size=MEM)
+    assert len(res.history) == 2
+    for g in range(2):
+        per_round_best = [row["best"][g] for row in res.history]
+        # greedy with elitist survivors: the best never regresses
+        assert per_round_best[1] <= per_round_best[0] + 1e-6
+        assert res.best_score[g] <= min(per_round_best) + 1e-6
+        assert row_spread(res.history[0], g) >= 1.0
+        # the winner is a *verified* schedule: simulate == oracle
+        prog = res.best[g]
+        mem = grid["mem_images"][0]
+        final, _ = run_program(prog, mem, max_steps=prog.n_instrs + 2)
+        np.testing.assert_array_equal(np.asarray(final.mem),
+                                      dags[g].evaluate(mem))
+    # the front rows index the final mapping set
+    assert np.asarray(res.front.indices).shape[0] == 2
+    H = len(grid["hw_configs"])
+    D = grid["mem_images"].shape[0]
+    for g in range(2):
+        for j in range(int(res.front.count[g])):
+            idx = int(np.asarray(res.front.indices)[g, j])
+            assert res.mappings.kernel_of[idx // (H * D)] == g
+
+
+def row_spread(row, g):
+    return row["worst"][g] / max(row["best"][g], 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Service + resumable runner
+# ---------------------------------------------------------------------------
+
+def test_service_mapping_request_folds_to_kernel_winners(mset, grid,
+                                                         profile):
+    """A reduced mapping request comes back with one row per KERNEL
+    (request-local coords), equal to the solo folded sweep; streamed
+    partials merge to exactly the final answer."""
+    from repro.service import SweepRequest, SweepService
+    spec = TopK("edp", 3)
+    want = dse.sweep(mappings=mset, profile=profile, reduce=spec,
+                     **_sweep_kw(grid))
+    parts = []
+    svc = SweepService(profile, unit_size=8, max_steps=MAX_STEPS,
+                       mem_size=MEM)
+    req = SweepRequest(mappings=mset, hw_configs=grid["hw_configs"],
+                       mem_images=grid["mem_images"], reduce=spec,
+                       on_partial=lambda rid, lo, hi, p: parts.append(p))
+    rid = svc.submit(req)
+    out = svc.drain()[rid]
+    assert out.arrays["indices"].shape == (mset.n_kernels, 3)
+    for f in REDUCED_FIELDS:
+        np.testing.assert_array_equal(out.arrays[f],
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    assert len(parts) > 1
+    merged = merge_reduced(spec, [
+        ReducedResult(**{f: p[f] for f in REDUCED_FIELDS})
+        for p in parts])
+    np.testing.assert_array_equal(np.asarray(merged.indices),
+                                  np.asarray(want.indices))
+    # candidate trip counts were recorded per candidate NAME before fold
+    assert any(k.startswith("k0#m") for k in svc.steps_history)
+
+
+def test_service_rejects_conflicting_request(mset, grid):
+    from repro.service import SweepRequest
+    with pytest.raises(ValueError, match="not both"):
+        SweepRequest(programs=list(mset.programs), mappings=mset,
+                     hw_configs=grid["hw_configs"],
+                     mem_images=grid["mem_images"])
+    with pytest.raises(ValueError, match="programs= or mappings="):
+        SweepRequest(hw_configs=grid["hw_configs"],
+                     mem_images=grid["mem_images"])
+
+
+def test_runner_mapping_campaign_checkpoint_resume(mset, grid, profile,
+                                                   tmp_path):
+    """A mapping campaign interrupted after 2 units resumes from its
+    checkpoints in a fresh runner and folds bit-identically to an
+    uninterrupted run."""
+    from repro.service import ResumableSweepRunner
+    spec = TopK("edp", 3)
+    kw = dict(mappings=mset, profile=profile,
+              hw_configs=grid["hw_configs"],
+              mem_images=grid["mem_images"], unit_size=8,
+              max_steps=MAX_STEPS, mem_size=MEM, reduce=spec)
+    solo = ResumableSweepRunner(**kw)
+    solo.run()
+    want = solo.stitch_folded(require_complete=False)
+
+    ck = str(tmp_path / "ck")
+    first = ResumableSweepRunner(ckpt_dir=ck, ckpt_async=False, **kw)
+    for k in first.pending_units()[:2]:
+        first.run_unit(k)
+    resumed = ResumableSweepRunner(ckpt_dir=ck, **kw)
+    assert resumed.report.units_resumed == 2
+    resumed.run()
+    got = resumed.stitch_folded(require_complete=False)
+    for f in REDUCED_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f)
+    with pytest.raises(ValueError, match="mapping campaign"):
+        ResumableSweepRunner(programs=list(mset.programs),
+                             profile=profile,
+                             hw_configs=grid["hw_configs"],
+                             mem_images=grid["mem_images"],
+                             reduce=spec).stitch_folded(
+                                 require_complete=False)
