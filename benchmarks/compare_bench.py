@@ -29,6 +29,12 @@ Gated metrics and tolerances (rel = allowed fractional drop vs baseline):
                                                timings, noisiest ratio)
   recovery.checkpoint_overhead_pct  abs +8.0   lower is better (percentage
                                                points over plain runner)
+  transport.overhead_ratio          rel +0.75  lower is better -- HTTP
+                                               transport / in-process
+                                               steady seconds for the same
+                                               campaign; loopback socket
+                                               timings jitter, hence the
+                                               loose ceiling
 
 Hard invariants checked on the *current* run alone (no baseline needed):
 
@@ -51,6 +57,10 @@ Hard invariants checked on the *current* run alone (no baseline needed):
                                                      EDP by construction
   mapping_search.trace_counts_packed <= n_buckets    the mapping axis adds
                                                      zero retraces
+  transport.matches_inproc                           the folded HTTP-stream
+                                                     arrays match the
+                                                     in-process service
+                                                     result
 
 Check the invariants of an already-written record (CI does this for the
 committed full-size BENCH_sim_throughput.json without re-running it):
@@ -84,6 +94,12 @@ REDUCTION_STEADY_FLOOR = 0.9
 # plans score the identical grid; a looser tolerance than multi_kernel
 # because K single-candidate plans amortize worse and jitter more.
 MAPPING_REL_TOL = 0.25
+# Transport lane: allowed fractional *increase* of overhead_ratio
+# (transport/in-process steady seconds, lower is better) over baseline.
+# Loopback HTTP timings are the noisiest ratio in the suite -- the
+# denominator is a fast in-process sweep -- so the ceiling is loose;
+# the invariant below still pins correctness on every run.
+TRANSPORT_OVERHEAD_REL_TOL = 0.75
 
 
 def _mk_rows(payload: dict) -> dict:
@@ -150,6 +166,11 @@ def check_invariants(current: dict) -> List[str]:
                 f"mapping_search: trace_counts_packed={traces} > "
                 f"n_buckets={n_buckets} (the mapping axis must add zero "
                 "retraces over the bucketed path)")
+    tr = current.get("transport")
+    if tr and tr.get("matches_inproc") is False:
+        errors.append(
+            "transport: matches_inproc is false (the folded HTTP-stream "
+            "arrays diverged from the in-process service result)")
     return errors
 
 
@@ -215,6 +236,20 @@ def compare(baseline: dict, current: dict) -> Tuple[List[str], List[str]]:
                             f"{float(c_ck):.2f} > {ceiling:.2f} "
                             f"(baseline {float(b_ck):.2f} + "
                             f"{CKPT_OVERHEAD_ABS_TOL}pt)")
+
+    b_tr = baseline.get("transport", {}).get("overhead_ratio")
+    c_tr = current.get("transport", {}).get("overhead_ratio")
+    if b_tr is not None and c_tr is not None:
+        ceiling = float(b_tr) * (1.0 + TRANSPORT_OVERHEAD_REL_TOL)
+        verdict = "OK" if float(c_tr) <= ceiling else "FAIL"
+        report.append(f"  {verdict:4s} transport.overhead_ratio: "
+                      f"{float(c_tr):.3f} vs baseline {float(b_tr):.3f} "
+                      f"(ceiling {ceiling:.3f}, "
+                      f"tol +{TRANSPORT_OVERHEAD_REL_TOL:.0%})")
+        if float(c_tr) > ceiling:
+            failures.append(f"transport.overhead_ratio: {float(c_tr):.3f} "
+                            f"> {ceiling:.3f} (baseline {float(b_tr):.3f} "
+                            f"+ {TRANSPORT_OVERHEAD_REL_TOL:.0%})")
 
     return failures, report
 

@@ -1,7 +1,7 @@
 """The "instantaneous result" claim (paper Section 1): design points per
 second through the fused simulate+estimate sweep.
 
-Seven comparisons, all machine-readable in BENCH_sim_throughput.json so
+Eight comparisons, all machine-readable in BENCH_sim_throughput.json so
 the perf trajectory is trackable across PRs (schema: bench_schema.json,
 validated in CI by benchmarks.validate_bench):
   * single-point trace path vs the batched fused path (the paper's win);
@@ -30,7 +30,15 @@ validated in CI by benchmarks.validate_bench):
     vs the vectorized O(P) scheduler (must be >= 10x on 2048 x 16);
   * the crash-safe sweep service (service/runner): per-unit checkpoint
     overhead vs the plain partitioned run, and cold recovery time after
-    a mid-campaign kill vs re-running from scratch (docs/robustness.md).
+    a mid-campaign kill vs re-running from scratch (docs/robustness.md);
+  * transport lane: the identical campaign driven through the
+    in-process ``SweepService`` vs over the loopback HTTP front end
+    (``SweepClient`` -> ``SweepTransport``: JSON+base64 submission,
+    ndjson per-unit record streaming, cursor acks, idempotent folding)
+    -- ``overhead_ratio`` (transport/in-process steady seconds, CI
+    ceiling-gated) plus ``requests_per_s`` for the fixed per-request
+    HTTP cost, with the folded transport arrays re-checked against the
+    in-process result on every run (docs/service.md).
 
 Steps/sec is *true* steps: ``SweepResult.steps_executed`` counts the
 instructions each design point actually ran (early-exiting kernels stop
@@ -582,6 +590,104 @@ def _bench_recovery(rep: Report) -> dict:
     return rec
 
 
+def _bench_transport(rep: Report) -> dict:
+    """HTTP transport lane: what the chaos-hardened front end costs.
+
+    The same G-kernel campaign runs two ways, timed interleaved (same
+    rationale as the reduction lane -- the gated number is a ratio):
+
+      * in-process -- ``SweepService.submit`` + step loop, zero copies
+        (the baseline the recovery lane also builds on);
+      * over HTTP -- ``SweepClient`` against a loopback
+        ``SweepTransport``: JSON+base64 request encoding, ndjson
+        per-unit record streaming with cursor acks, idempotent folding.
+
+    ``overhead_ratio`` = transport/in-process steady seconds (lower is
+    better; compare_bench ceiling-gates it vs baseline), broken down to
+    ``overhead_ms_per_unit`` since every streamed unit record pays the
+    encode/decode + socket round.  ``requests_per_s`` (healthz round
+    trips) tracks the fixed per-request cost of the HTTP stack, and
+    ``matches_inproc`` re-checks the folded transport arrays against
+    the in-process result on every bench run (invariant-gated)."""
+    from repro.service import (SweepClient, SweepRequest, SweepService,
+                               SweepTransport)
+
+    prof = default_profile()
+    ks = _multi_kernels()
+    progs = [k.program for k in ks]
+    hws = [mk() for mk in TOPOLOGIES.values()]
+    mems = np.stack([np.asarray(k.mem_init) for k in ks])
+    max_steps = max(k.max_steps for k in ks)
+    unit_size = 4 if SMOKE else 8
+    G, H, D = len(progs), len(hws), int(mems.shape[0])
+    B = G * H * D
+    svc_kw = dict(slots=2, unit_size=unit_size, max_steps=max_steps,
+                  mem_size=int(mems.shape[1]), backend="xla")
+
+    # in-process side: one held service -- admissions after the first
+    # campaign reuse the lru-cached sweep executables
+    svc = SweepService(prof, **svc_kw)
+
+    def run_inproc():
+        rid = svc.submit(SweepRequest(programs=progs, hw_configs=hws,
+                                      mem_images=mems))
+        while svc.step():
+            pass
+        return svc.completed[rid]
+
+    # transport side: a second identically-configured service (the
+    # transport's worker thread owns it), no fault injection
+    tr = SweepTransport(SweepService(prof, **svc_kw))
+    host, port = tr.start()
+    client = SweepClient(host, port, seed=0)
+    run_transport = lambda: client.sweep(progs, hws, mems)
+
+    res_in = run_inproc()                                 # compile + warm
+    res_tr = run_transport()
+    match = all(
+        np.allclose(res_tr.arrays[f], np.asarray(res_in.arrays[f]),
+                    rtol=1e-6, atol=0)
+        if res_tr.arrays[f].dtype.kind == "f"
+        else np.array_equal(res_tr.arrays[f], np.asarray(res_in.arrays[f]))
+        for f in res_tr.arrays)
+    units = res_tr.stats.records_folded
+
+    reps = 2 if SMOKE else 5
+    t_in, t_tr = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_inproc()
+        t_in.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        run_transport()
+        t_tr.append(time.perf_counter() - t0)
+    steady_in, steady_tr = min(t_in), min(t_tr)
+
+    n_req = 25 if SMOKE else 200
+    t0 = time.perf_counter()
+    for _ in range(n_req):
+        client._request("GET", "/healthz")
+    t_req = time.perf_counter() - t0
+    tr.close()
+
+    rec = dict(
+        B=B, G=G, H=H, D=D, unit_size=unit_size, backend="xla",
+        records_per_sweep=units,
+        requests_per_s=n_req / max(t_req, 1e-9),
+        steady_seconds_inproc=steady_in,
+        steady_seconds_transport=steady_tr,
+        overhead_ratio=steady_tr / max(steady_in, 1e-9),
+        overhead_ms_per_unit=(max(steady_tr - steady_in, 0.0) * 1e3
+                              / max(units, 1)),
+        matches_inproc=bool(match))
+    rep.add(path="transport_http_stream", B=B,
+            seconds_per_batch=steady_tr, points_per_s=B / steady_tr,
+            steps_per_s=B / steady_tr,
+            speedup_vs_single=steady_in / max(steady_tr, 1e-9),
+            overhead_ratio=round(rec["overhead_ratio"], 2))
+    return rec
+
+
 def run() -> Report:
     # Bench-local autotune cache (unless the caller pinned one): the
     # multi-kernel lane pre-warms per-bucket winners into it, and the
@@ -598,6 +704,7 @@ def run() -> Report:
     map_rec = _bench_mapping_search(rep)
     mem_rec = _bench_mem_completion(rep)
     rec_rec = _bench_recovery(rep)
+    tr_rec = _bench_transport(rep)
     payload = dict(
         benchmark="sim_throughput",
         jax_backend=jax.default_backend(),
@@ -609,6 +716,7 @@ def run() -> Report:
         mapping_search=map_rec,
         mem_completion=mem_rec,
         recovery=rec_rec,
+        transport=tr_rec,
     )
     JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"[bench] wrote {JSON_PATH}" + (" (smoke mode)" if SMOKE else ""))

@@ -1,0 +1,133 @@
+"""Chaos drill for the sweep service's HTTP transport.
+
+End-to-end story for ``repro.service.transport`` + ``SweepClient``:
+
+  1. start ``python -m repro.service serve`` in a subprocess with a
+     seeded fault plan that drops submit responses, cuts result streams
+     mid-flight, and duplicates delivered records (plus execution
+     transients inside the runner);
+  2. drive a sweep campaign through ``SweepClient`` -- idempotent
+     submission, cursor-resumable streaming, idempotent folding;
+  3. SIGTERM the server mid-campaign: it drains gracefully (finishes
+     the unit in flight, checkpoints, closes streams with a ``drained``
+     sentinel) and exits 0;
+  4. restart the server on the same port + checkpoint root; the client
+     re-submits under the same idempotency key, the campaign resumes
+     its completed units from disk, and the folded result is
+     bit-identical to a monolithic in-process ``dse.sweep``.
+
+  PYTHONPATH=src python examples/sweep_client.py
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.apps import mibench
+from repro.core import dse
+from repro.core.characterization import default_profile
+from repro.core.hwconfig import TOPOLOGIES
+from repro.runtime.faults import FAULT_PLAN_ENV, FaultPlan
+from repro.service import ClientRetry, SweepClient
+
+REPO = Path(__file__).resolve().parents[1]
+MAX_STEPS = 256
+PLAN = FaultPlan(seed=13, transient_rate=0.6, max_transient_per_unit=2,
+                 net_submit_drop_rate=0.5, net_max_submit_drops=1,
+                 net_stream_disconnect_every=2, net_duplicate_rate=0.5)
+
+
+def serve(port_file, ckpt_root, port=0):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env[FAULT_PLAN_ENV] = PLAN.to_json()
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.service", "serve",
+         "--port", str(port), "--port-file", str(port_file),
+         "--unit-size", "1", "--max-steps", str(MAX_STEPS),
+         "--mem-size", "4096", "--ckpt-root", str(ckpt_root)],
+        env=env, cwd=str(REPO))
+
+
+def wait_port(port_file, proc):
+    while not port_file.exists():
+        assert proc.poll() is None, "server died before binding"
+        time.sleep(0.05)
+    d = json.loads(port_file.read_text())
+    return d["host"], d["port"]
+
+
+ks = [mibench.bitcnt(n_words=16), mibench.crc32(n_words=3)]
+hws = [TOPOLOGIES["baseline"](), TOPOLOGIES["c_interleaved"]()]
+mems = np.stack([k.mem_init for k in ks])
+progs = [k.program for k in ks]
+
+with tempfile.TemporaryDirectory() as tmp:
+    tmp = Path(tmp)
+    port_file, ckpt_root = tmp / "port.json", tmp / "ck"
+
+    # 1. chaos server: every fault class armed from one seeded plan
+    srv = serve(port_file, ckpt_root)
+    host, port = wait_port(port_file, srv)
+    print(f"[1] chaos server on {host}:{port} "
+          f"(drops + disconnects + duplicates + transients)")
+
+    # 2. drive the campaign from a thread so we can SIGTERM mid-flight
+    client = SweepClient(host, port, seed=17, timeout_s=60.0,
+                         retry=ClientRetry(max_attempts=60,
+                                           max_resubmits=8,
+                                           max_backoff_s=1.0))
+    done = {}
+    th = threading.Thread(
+        target=lambda: done.setdefault("res", client.sweep(
+            progs, hws, mems, idempotency_key="drill")))
+    th.start()
+
+    # 3. SIGTERM once >= 1 record streamed but the campaign is not done
+    while True:
+        try:
+            s, o = client._request("GET", "/v1/sweeps/c0")
+            if s == 200 and o.get("records", 0) >= 1 \
+                    and o.get("status") == "running":
+                break
+        except OSError:
+            pass
+        time.sleep(0.02)
+    srv.send_signal(signal.SIGTERM)
+    rc = srv.wait(timeout=300)
+    assert rc == 0, f"drain should exit 0, got {rc}"
+    print(f"[3] SIGTERM mid-campaign: server drained gracefully (rc=0), "
+          f"in-flight unit checkpointed")
+
+    # 4. restart on the same port + checkpoint root; the client's
+    #    re-submission under the same key resumes from disk
+    srv2 = serve(port_file, ckpt_root, port=port)
+    th.join(timeout=600)
+    assert not th.is_alive() and "res" in done
+    res = done["res"]
+    st = res.stats
+    print(f"[4] campaign completed across the restart: "
+          f"{st.submit_attempts} submit attempts, {st.resubmits} "
+          f"re-submissions, {st.reconnects} stream reconnects, "
+          f"{st.duplicate_records} duplicate records folded")
+    srv2.send_signal(signal.SIGTERM)
+    srv2.wait(timeout=300)
+
+mono = dse.sweep(programs=progs, profile=default_profile(),
+                 hw_configs=hws, mem_images=mems, max_steps=MAX_STEPS,
+                 mem_size=4096)
+for f in ("latency_cc", "checksum", "steps_executed"):
+    np.testing.assert_array_equal(res.arrays[f],
+                                  np.asarray(getattr(mono, f)), err_msg=f)
+for f in ("energy_pj", "power_mw"):
+    np.testing.assert_allclose(res.arrays[f],
+                               np.asarray(getattr(mono, f)), rtol=1e-6,
+                               err_msg=f)
+assert st.resubmits >= 1
+print("\nok: chaos campaign folded bit-identical to the monolithic sweep")

@@ -36,6 +36,7 @@ and reproducible across backends, meshes and unit partitions.
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
 import functools
 from typing import NamedTuple, Sequence, Tuple, Union
@@ -346,6 +347,46 @@ def fold_segments(spec: Reduction, part: ReducedResult, seg_of,
 
 def _as_numpy(r: ReducedResult) -> ReducedResult:
     return ReducedResult(*(np.asarray(x) for x in r))
+
+
+# ---------------------------------------------------------------------------
+# Wire serialization (JSON-safe, bit-exact)
+# ---------------------------------------------------------------------------
+#
+# The sweep service's HTTP transport (``service/transport.py``) ships
+# results as JSON lines.  Floats must survive the trip bit-for-bit (the
+# transport's contract is that a folded stream equals the monolithic
+# sweep EXACTLY), so arrays travel as base64 of their raw little-endian
+# bytes, never as decimal literals.
+
+def array_to_wire(a: np.ndarray) -> dict:
+    """JSON-safe encoding of an array: dtype + shape + base64 raw bytes.
+    Bit-exact round trip with :func:`array_from_wire`."""
+    a = np.ascontiguousarray(a)
+    if a.dtype.byteorder == ">":          # wire format is little-endian
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def array_from_wire(d: dict) -> np.ndarray:
+    """Inverse of :func:`array_to_wire`."""
+    a = np.frombuffer(base64.b64decode(d["data"]),
+                      dtype=np.dtype(d["dtype"]))
+    return a.reshape(tuple(int(s) for s in d["shape"])).copy()
+
+
+def reduced_to_wire(r: ReducedResult) -> dict:
+    """JSON-safe ``ReducedResult`` (field name -> wire array)."""
+    r = _as_numpy(r)
+    return {f: array_to_wire(getattr(r, f)) for f in REDUCED_FIELDS}
+
+
+def reduced_from_wire(d: dict) -> ReducedResult:
+    """Inverse of :func:`reduced_to_wire` (canonical output dtypes)."""
+    return ReducedResult(**{
+        f: array_from_wire(d[f]).astype(_OUT_DTYPES[f], copy=False)
+        for f in REDUCED_FIELDS})
 
 
 # ---------------------------------------------------------------------------

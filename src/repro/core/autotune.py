@@ -28,6 +28,7 @@ Opt into *automatic* first-encounter tuning with ``REPRO_AUTOTUNE=1``
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -35,6 +36,11 @@ import tempfile
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Union
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: saves fall back to atomic
+    fcntl = None             # last-writer-wins (the pre-lock behavior)
 
 # The sentinel for "let the autotuner decide".  A distinct object (not
 # None): ``chunk_steps=None`` already means "disable chunking" in the
@@ -134,40 +140,90 @@ class AutotuneCache:
     version / malformed entries all degrade to "no cached winner" --
     ``resolve`` then falls back to the static defaults.  Saves are
     atomic (tmp + rename), so a crash mid-save never corrupts winners
-    already persisted."""
+    already persisted, AND merge under an ``fcntl`` file lock: a save
+    re-reads the on-disk entries and unions them with this process's
+    (ours win per key), so concurrent service workers warm each other's
+    shape classes instead of last-writer-wins dropping them.  If the
+    lock cannot be taken within ``lock_timeout_s`` (or the platform has
+    no ``fcntl``), the save degrades to the plain atomic write -- the
+    cache is an accelerator, never a point of contention."""
 
-    def __init__(self, path: Optional[Union[str, Path]] = None):
+    def __init__(self, path: Optional[Union[str, Path]] = None, *,
+                 lock_timeout_s: float = 1.0):
         self.path = Path(path) if path is not None else _default_path()
+        self.lock_timeout_s = lock_timeout_s
         self.entries: Dict[str, dict] = {}
         self._load()
 
-    def _load(self) -> None:
+    def _read_entries(self) -> Dict[str, dict]:
+        """Current on-disk entries (schema-filtered); {} on any damage."""
         try:
             raw = json.loads(self.path.read_text())
         except (OSError, ValueError):
-            return
+            return {}
         if not isinstance(raw, dict) \
                 or raw.get("version") != CACHE_VERSION \
                 or not isinstance(raw.get("entries"), dict):
-            return                           # stale/foreign cache: ignore
-        self.entries = {k: v for k, v in raw["entries"].items()
-                        if isinstance(k, str) and _valid_entry(v)}
+            return {}                        # stale/foreign cache: ignore
+        return {k: v for k, v in raw["entries"].items()
+                if isinstance(k, str) and _valid_entry(v)}
+
+    def _load(self) -> None:
+        self.entries = self._read_entries() or self.entries
+
+    @contextlib.contextmanager
+    def _locked(self):
+        """Yield True holding an exclusive lock on ``<cache>.lock``,
+        False when the lock is unavailable (timeout / no fcntl)."""
+        if fcntl is None or self.lock_timeout_s <= 0:
+            yield False
+            return
+        lock_path = self.path.with_name(self.path.name + ".lock")
+        try:
+            fd = os.open(str(lock_path), os.O_CREAT | os.O_RDWR, 0o644)
+        except OSError:
+            yield False
+            return
+        try:
+            deadline = time.monotonic() + self.lock_timeout_s
+            while True:
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    break
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        yield False
+                        return
+                    time.sleep(0.01)
+            try:
+                yield True
+            finally:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+        finally:
+            os.close(fd)
 
     def save(self) -> None:
-        payload = {"version": CACHE_VERSION, "entries": self.entries}
         self.path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
-                                   prefix=self.path.name, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True)
-                f.write("\n")
-            os.replace(tmp, self.path)
-        except OSError:
+        with self._locked() as held:
+            if held:
+                # read-merge-write: union the entries some other worker
+                # persisted since our load; our own keys win conflicts
+                merged = self._read_entries()
+                merged.update(self.entries)
+                self.entries = merged
+            payload = {"version": CACHE_VERSION, "entries": self.entries}
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
             try:
-                os.unlink(tmp)
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                    f.write("\n")
+                os.replace(tmp, self.path)
             except OSError:
-                pass
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
 
     def lookup(self, shape: ShapeClass) -> Optional[TunedConfig]:
         e = self.entries.get(shape.key)

@@ -25,6 +25,25 @@ Fault classes covered (mirroring the failure model in
   * **dead node** -- a heartbeat node goes silent from a given unit on,
     driving the failure-detector -> elastic-replan path.
 
+The HTTP transport (``service/transport.py``) extends the same model
+across the wire with a **network stanza** (``net_*`` fields, applied by
+``NetFaultInjector`` inside the server):
+
+  * **dropped submit response** -- the request is admitted but the
+    response never reaches the client, so the client must retry the
+    POST; the idempotency key guarantees the retry maps to the same
+    campaign instead of double-admitting.  Capped per key
+    (``net_max_submit_drops``) so submission terminates.
+  * **mid-stream disconnect** -- a result stream is cut after N records
+    on a connection; the client reconnects with ``cursor=`` and resumes
+    at its last-acked record.  N >= 1 guarantees per-connection
+    progress, so streaming terminates.
+  * **duplicate delivery** -- a record line is sent twice (same
+    cursor); the client's fold must be idempotent
+    (``analysis.pareto.merge_reduced`` dedupes by flat grid index).
+  * **delivery delay** -- a record is held back a fixed number of
+    seconds, exercising client read timeouts without real packet loss.
+
 ``FaultPlan`` serializes to JSON (``to_json``/``from_json``) and rides
 the ``REPRO_FAULT_PLAN`` environment variable into subprocesses, so
 kill-and-resume tests configure the child's faults without new flags.
@@ -35,7 +54,8 @@ import dataclasses
 import json
 import os
 import signal
-from typing import Dict, Optional, Tuple
+import zlib
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
@@ -61,6 +81,13 @@ class FaultPlan:
     slow_extra_s: float = 0.0
     kill_at_unit: Optional[int] = None     # SIGKILL before this commit
     dead_nodes: Tuple[Tuple[int, str], ...] = ()  # (from_unit, node)
+    # -- network stanza (service/transport.py) --------------------------
+    net_submit_drop_rate: float = 0.0      # P(POST response dropped)
+    net_max_submit_drops: int = 3          # per idempotency key cap
+    net_stream_disconnect_every: int = 0   # cut stream after N records
+    net_duplicate_rate: float = 0.0        # P(record delivered twice)
+    net_delay_rate: float = 0.0            # P(record delayed)
+    net_delay_s: float = 0.0               # seconds per delayed record
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
@@ -128,3 +155,65 @@ class FaultInjector:
         """True once `node` has gone silent (stops heartbeating) as of
         this unit."""
         return any(unit >= u and node == n for u, n in self.plan.dead_nodes)
+
+
+def _ident(s: Union[str, int]) -> int:
+    """Stable small integer for a string identifier (seeding material)."""
+    if isinstance(s, int):
+        return s & 0xFFFFFFFF
+    return zlib.crc32(s.encode())
+
+
+class NetFaultInjector:
+    """Deterministic network-fault decisions for the HTTP transport.
+
+    Mirrors ``FaultInjector``: the only state is the per-key submit-drop
+    counter (the termination cap) -- every decision is a pure function
+    of ``(seed, identifier, counter)``, so a chaos run over the wire
+    replays identically regardless of socket timing or thread
+    interleaving.  The *applier* lives in ``service/transport.py``; this
+    class only answers yes/no/how-long.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._submit_drops: Dict[str, int] = {}
+
+    def _roll(self, *parts: Union[str, int]) -> float:
+        rng = np.random.default_rng(
+            [self.plan.seed] + [_ident(p) for p in parts])
+        return float(rng.random())
+
+    def drop_submit_response(self, key: str) -> bool:
+        """Should the (already admitted) POST's response be dropped?
+        Capped per idempotency key so a retrying client terminates."""
+        n = self._submit_drops.get(key, 0)
+        if (self.plan.net_submit_drop_rate <= 0.0
+                or n >= self.plan.net_max_submit_drops):
+            return False
+        if self._roll("submit", key, n) < self.plan.net_submit_drop_rate:
+            self._submit_drops[key] = n + 1
+            return True
+        return False
+
+    def stream_disconnect_after(self) -> Optional[int]:
+        """Records to deliver on one stream connection before an abrupt
+        cut (None = never cut).  >= 1 by construction, so every
+        connection makes progress and cursor-resume terminates."""
+        n = self.plan.net_stream_disconnect_every
+        return max(1, int(n)) if n else None
+
+    def duplicate_record(self, campaign: str, cursor: int) -> bool:
+        """Should this record line be delivered twice?"""
+        if self.plan.net_duplicate_rate <= 0.0:
+            return False
+        return (self._roll("dup", campaign, cursor)
+                < self.plan.net_duplicate_rate)
+
+    def delay_record(self, campaign: str, cursor: int) -> float:
+        """Synthetic delivery delay (seconds) for this record."""
+        if self.plan.net_delay_rate <= 0.0 or self.plan.net_delay_s <= 0.0:
+            return 0.0
+        if self._roll("delay", campaign, cursor) < self.plan.net_delay_rate:
+            return self.plan.net_delay_s
+        return 0.0

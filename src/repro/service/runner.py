@@ -326,6 +326,22 @@ class ResumableSweepRunner:
                 attempts=int(extra.get("attempts", 0)), resumed=True,
                 seconds=0.0, node=""))
 
+    def attach_checkpoints(self, ckpt_dir: Union[str, Path]) -> None:
+        """Late-bind a checkpoint directory and load its completed units.
+
+        The sweep service packs requests into a plan *before* it knows
+        the campaign fingerprint, so it constructs the runner bare and
+        attaches ``<ckpt_root>/<fingerprint prefix>`` afterwards: a
+        re-submitted campaign (same grid, same config) resumes its
+        completed units across a service restart, exactly like the
+        ``ckpt_dir=`` constructor path."""
+        if self._results or self._skipped:
+            raise RuntimeError(
+                "attach_checkpoints: campaign already has unit results; "
+                "attach before the first run_unit call")
+        self.mgr = CheckpointManager(str(ckpt_dir), keep_n=0)
+        self._load_completed()
+
     # -- unit geometry ------------------------------------------------------
     def _unit_range(self, k: int) -> Tuple[int, int]:
         lo = k * self.unit_size

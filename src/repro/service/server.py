@@ -61,8 +61,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -250,7 +251,9 @@ class SweepService:
                  max_buckets=AUTO,
                  retry: Optional[RetryPolicy] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 runner_kw: Optional[dict] = None):
+                 runner_kw: Optional[dict] = None,
+                 steps_history_max: int = 4096,
+                 ckpt_root: Optional[str] = None):
         self.profile = profile
         self.slots = slots
         self.queue_max = queue_max
@@ -280,8 +283,18 @@ class SweepService:
         # short kernel run long -- so once every kernel in an admission
         # window has history, ``_admit`` buckets by how long kernels
         # actually RAN (``bucket_programs(observed_steps=...)``) instead
-        # of their instruction count.
-        self.steps_history: Dict[str, int] = {}
+        # of their instruction count.  LRU-bounded: mapping campaigns
+        # mint fresh ``#m`` candidate names every search round, so an
+        # unbounded history leaks in a long-lived service -- entries
+        # past ``steps_history_max`` evict least-recently-touched first
+        # (both reads in ``_admit`` and writes refresh recency).
+        self.steps_history: "OrderedDict[str, int]" = OrderedDict()
+        self.steps_history_max = max(1, int(steps_history_max))
+        # when set, every admitted slot gets a checkpoint directory
+        # keyed by its campaign fingerprint, so an identical
+        # re-submission after a service restart resumes completed units
+        # instead of recomputing them (transport drain/restart path)
+        self.ckpt_root = ckpt_root
 
     # -- admission ----------------------------------------------------------
     def submit(self, request: SweepRequest) -> int:
@@ -334,6 +347,10 @@ class SweepService:
                            for r in pack for p in list(r.programs))
             keys = [max(hist[p.name] for p in list(r.programs))
                     for r in pack] if by_steps else tmaxes
+            if by_steps:                      # reads refresh LRU recency
+                for r in pack:
+                    for p in list(r.programs):
+                        hist.move_to_end(p.name)
             if len(pack) > 1 and self.max_buckets > 1:
                 groups = bucket_boundaries(keys, self.max_buckets)
                 keep = next(set(g) for g in groups if 0 in g)
@@ -352,7 +369,20 @@ class SweepService:
                 max_steps=self.max_steps, mem_size=self.mem_size,
                 backend=self.backend, retry=self.retry,
                 reduce=pack[0].reduce, **self.runner_kw)
-            self._slots[si] = _Slot(runner, members)
+            slot = _Slot(runner, members)
+            self._slots[si] = slot
+            if self.ckpt_root:
+                # fingerprint-keyed directory: an identical re-submission
+                # (post-restart) resumes its completed units; a different
+                # campaign lands in a different directory by construction
+                runner.attach_checkpoints(os.path.join(
+                    self.ckpt_root, runner.fingerprint[:24]))
+                # resumed units never pass through run_unit, so their
+                # partials must be replayed here or a streaming client
+                # would fold an incomplete set
+                for k in sorted(runner._results):
+                    self._deliver_partial(slot, *runner._unit_range(k),
+                                          runner._results[k])
 
     # -- execution ----------------------------------------------------------
     def _expire(self, slot: _Slot):
@@ -417,6 +447,9 @@ class SweepService:
             if s > 0:
                 self.steps_history[p.name] = max(
                     self.steps_history.get(p.name, 0), int(s))
+                self.steps_history.move_to_end(p.name)
+        while len(self.steps_history) > self.steps_history_max:
+            self.steps_history.popitem(last=False)
 
     def _finish(self, si: int):
         slot = self._slots[si]
